@@ -1,0 +1,37 @@
+"""Paper Fig. 5 — supported DPU size N (=M) vs bit precision B at
+DR in {1, 5, 10} GS/s for ASMW / MASW / SMWA."""
+
+import time
+
+from repro.core import scalability as sc
+
+
+def run(csv=True):
+    rows = []
+    t0 = time.time()
+    for dr in (1, 5, 10):
+        for b in range(1, 9):
+            n = {
+                org: sc.calibrated_max_n(org, b, dr)
+                for org in ("ASMW", "MASW", "SMWA")
+            }
+            rows.append((dr, b, n["ASMW"], n["MASW"], n["SMWA"]))
+    us = (time.time() - t0) * 1e6 / len(rows)
+    if csv:
+        print("fig5_scalability,N_vs_B_per_DR")
+        print("dr_gs,bits,N_ASMW,N_MASW,N_SMWA")
+        for r in rows:
+            print(",".join(str(x) for x in r))
+        print(f"# us_per_cell={us:.1f}")
+    return rows
+
+
+def main():
+    rows = run()
+    # validation hooks (also asserted in tests)
+    for dr, b, a, m, s in rows:
+        assert s >= m >= a, (dr, b, a, m, s)
+
+
+if __name__ == "__main__":
+    main()

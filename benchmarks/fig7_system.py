@@ -1,0 +1,70 @@
+"""Paper Fig. 7 — normalized FPS, FPS/W, FPS/W/mm^2 for the four CNNs on
+ASMW/MASW/SMWA at 1/5/10 GS/s (area-proportionate configuration).
+
+Normalization matches the paper: ASMW running ResNet50 at 10 GS/s = 1.
+Area efficiency uses the paper's equal-area construction (all accelerators
+matched to SMWA's area at that DR), so FPS/W/mm^2 ratios track FPS/W; our
+independent area model is reported by table5_dpu.py.
+"""
+
+import time
+
+import numpy as np
+
+from repro.core.perfmodel import AcceleratorConfig
+from repro.core.simulator import evaluate_all
+
+MODELS = ("googlenet", "resnet50", "mobilenet_v2", "shufflenet_v2")
+ORGS = ("ASMW", "MASW", "SMWA")
+DRS = (1, 5, 10)
+
+
+def gmean(xs):
+    return float(np.exp(np.mean(np.log(xs))))
+
+
+def run():
+    t0 = time.time()
+    res = evaluate_all(models=MODELS)
+    sim_us = (time.time() - t0) * 1e6 / len(res)
+
+    base = res[("ASMW", 10, "resnet50")]
+    matched_area = {dr: AcceleratorConfig.from_paper("SMWA", dr).total_area_mm2() for dr in DRS}
+
+    print("fig7_system,normalized_to_ASMW_resnet50_10GS")
+    print("org,dr_gs,model,norm_fps,norm_fps_per_w,norm_fps_per_w_per_mm2")
+    for (org, dr, m), r in sorted(res.items()):
+        nf = r.fps / base.fps
+        nw = r.fps_per_w / base.fps_per_w
+        na = (r.fps_per_w / matched_area[dr]) / (base.fps_per_w / matched_area[10])
+        print(f"{org},{dr},{m},{nf:.3f},{nw:.3f},{na:.3f}")
+
+    print("ratios,SMWA_vs_other (gmean over CNNs | max)")
+    summary = {}
+    for dr in DRS:
+        for other in ("ASMW", "MASW"):
+            rf = [res[("SMWA", dr, m)].fps / res[(other, dr, m)].fps for m in MODELS]
+            rw = [
+                res[("SMWA", dr, m)].fps_per_w / res[(other, dr, m)].fps_per_w
+                for m in MODELS
+            ]
+            summary[(dr, other)] = (gmean(rf), max(rf), gmean(rw), max(rw))
+            print(
+                f"SMWA/{other}@{dr}GS/s,fps_g={gmean(rf):.2f},fps_max={max(rf):.2f},"
+                f"fpw_g={gmean(rw):.2f},fpw_max={max(rw):.2f}"
+            )
+    print(f"# us_per_sim={sim_us:.0f}")
+    return summary
+
+
+def main():
+    summary = run()
+    # Paper-claim direction checks (magnitude comparison in EXPERIMENTS.md):
+    for (dr, other), (fg, fm, wg, wm) in summary.items():
+        assert fg > 1.0, f"SMWA must beat {other} on FPS at {dr} GS/s"
+    # ratio grows with datarate (paper: 2.5x -> 3.9x -> 4.4x vs ASMW)
+    assert summary[(10, "ASMW")][0] > summary[(1, "ASMW")][0]
+
+
+if __name__ == "__main__":
+    main()

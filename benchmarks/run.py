@@ -1,0 +1,46 @@
+"""Benchmark harness — one entry per paper table/figure (deliverable d),
+plus the dry-run roofline report.  Prints ``name,us_per_call,derived`` CSV
+blocks per benchmark.
+"""
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import fig5_scalability, fig7_system, noise_accuracy, table5_dpu
+
+    benches = [
+        ("fig5_scalability", fig5_scalability.main),
+        ("table5_dpu", table5_dpu.main),
+        ("fig7_system", fig7_system.main),
+        ("noise_accuracy", noise_accuracy.main),
+    ]
+    # roofline report requires dry-run results; degrade gracefully.
+    try:
+        from benchmarks import roofline_report
+
+        benches.append(("roofline_report", roofline_report.main))
+    except Exception:
+        pass
+
+    failures = []
+    for name, fn in benches:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"{name},{(time.time()-t0)*1e6:.0f},ok")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"{name},{(time.time()-t0)*1e6:.0f},FAILED")
+    if failures:
+        print("FAILED:", failures)
+        sys.exit(1)
+    print("\nall benchmarks ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Table V — DPU size N and area-proportionate DPU count at B=4
+across datarates, plus our independent area-model cross-check."""
+
+import time
+
+from repro.core import scalability as sc
+from repro.core.perfmodel import AcceleratorConfig, area_matched_counts
+
+
+def run():
+    print("table5,ours_vs_paper")
+    print("org,dr_gs,N_ours,N_paper,count_paper,count_area_model")
+    t0 = time.time()
+    ours = sc.table_v()
+    for (org, dr), n_paper in sorted(sc.TABLE_V_N.items()):
+        matched = area_matched_counts(dr)
+        print(
+            f"{org},{dr},{ours[(org, dr)]},{n_paper},"
+            f"{sc.TABLE_V_COUNT[(org, dr)]},{matched[org]}"
+        )
+    print(f"# us_total={(time.time()-t0)*1e6:.0f}")
+    return ours
+
+
+def main():
+    ours = run()
+    exact = sum(ours[k] == v for k, v in sc.TABLE_V_N.items())
+    print(f"# exact_cells={exact}/9")
+    assert exact >= 7
+
+
+if __name__ == "__main__":
+    main()

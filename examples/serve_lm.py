@@ -1,0 +1,62 @@
+"""End-to-end serving driver (the paper's kind: inference).
+
+Serves a reduced qwen2-0.5b through the batched continuous-batching engine,
+with every weight GEMM routed through the photonic SMWA DPU datapath
+(int8, bit-sliced, psum-chunked) — then repeats with the exact float path
+and reports agreement + throughput.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import dataclasses
+import time
+
+import numpy as np
+import jax
+
+from repro.core.dpu import DPUConfig
+from repro.models import registry
+from repro.models.common import init_tree
+from repro.runtime import serve
+
+
+def run(photonic: bool, params, arch, cfg, prompts):
+    if photonic:
+        cfg = dataclasses.replace(
+            cfg,
+            photonic=DPUConfig(organization="SMWA", bits=4, datarate_gs=5.0),
+            photonic_backend="ref",
+        )
+    eng = serve.Engine(arch, cfg, params, serve.ServeConfig(batch_size=4, max_seq=64))
+    reqs = [
+        serve.Request(uid=i, prompt=p, max_new_tokens=8) for i, p in enumerate(prompts)
+    ]
+    t0 = time.time()
+    eng.run(reqs)
+    dt = time.time() - t0
+    toks = sum(len(r.output) for r in reqs)
+    return reqs, toks / dt, eng.stats
+
+
+def main():
+    arch = registry.get("qwen2-0.5b")
+    cfg = dataclasses.replace(arch.smoke_config, remat=False)
+    params = init_tree(arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32) for _ in range(8)]
+
+    exact_reqs, exact_tps, stats = run(False, params, arch, cfg, prompts)
+    print(f"float path:    {exact_tps:8.1f} tok/s  {stats}")
+    photo_reqs, photo_tps, stats = run(True, params, arch, cfg, prompts)
+    print(f"photonic path: {photo_tps:8.1f} tok/s  {stats}")
+
+    agree = np.mean([
+        np.mean(np.array(a.output) == np.array(b.output))
+        for a, b in zip(exact_reqs, photo_reqs)
+    ])
+    print(f"token agreement photonic vs float: {agree:.2%}")
+    print("sample output (req 0):", exact_reqs[0].output)
+
+
+if __name__ == "__main__":
+    main()

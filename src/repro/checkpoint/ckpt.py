@@ -1,0 +1,125 @@
+"""Sharded, async, elastic checkpointing.
+
+* ``save``: gathers each pytree leaf to host (optionally on a background
+  thread), writes one ``.npz`` per top-level group + a JSON manifest, then
+  atomically renames the step directory — a killed save never corrupts the
+  latest-complete checkpoint.
+* ``restore``: reads the manifest, rebuilds the pytree, and ``device_put``s
+  each leaf with the *target* sharding — which may belong to a different
+  mesh than the one that saved it (elastic resharding: N pods -> M pods).
+* ``latest_step`` / ``cleanup``: retention of the last k checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(
+    ckpt_dir: str | Path,
+    step: int,
+    tree: Any,
+    *,
+    blocking: bool = True,
+) -> threading.Thread | None:
+    """Write checkpoint for `step`. Non-blocking mode gathers to host
+    synchronously (cheap) and writes on a daemon thread (overlaps the next
+    training steps)."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    flat, _ = _flatten(tree)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+    def _write():
+        tmp = ckpt_dir / f".tmp_step_{step:08d}"
+        final = ckpt_dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "leaves.npz", **host)
+        manifest = {
+            "step": step,
+            "keys": sorted(host),
+            "shapes": {k: list(v.shape) for k, v in host.items()},
+            "dtypes": {k: str(v.dtype) for k, v in host.items()},
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic publish
+
+    if blocking:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in ckpt_dir.iterdir()
+        if p.name.startswith("step_") and (p / "manifest.json").exists()
+    ]
+    return max(steps) if steps else None
+
+
+def restore(
+    ckpt_dir: str | Path,
+    step: int,
+    target_tree: Any,
+    shardings: Any = None,
+) -> Any:
+    """Rebuild `target_tree`-shaped pytree from disk; reshard onto
+    `shardings` (same structure) if given — the elastic-resume path."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    data = np.load(d / "leaves.npz")
+    flat_target, treedef = _flatten(target_tree)
+    sh_flat = None
+    if shardings is not None:
+        sh_map, _ = _flatten(shardings)
+        sh_flat = sh_map
+    out = {}
+    for key, tgt in flat_target.items():
+        arr = data[key]
+        assert arr.shape == tuple(tgt.shape), (key, arr.shape, tgt.shape)
+        if sh_flat is not None and key in sh_flat:
+            out[key] = jax.device_put(arr.astype(tgt.dtype), sh_flat[key])
+        else:
+            out[key] = jax.numpy.asarray(arr.astype(tgt.dtype))
+    # _flatten preserves tree_flatten_with_path's canonical leaf order.
+    return jax.tree_util.tree_unflatten(treedef, list(out.values()))
+
+
+def cleanup(ckpt_dir: str | Path, keep: int = 3) -> None:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return
+    steps = sorted(
+        int(p.name.split("_")[1])
+        for p in ckpt_dir.iterdir()
+        if p.name.startswith("step_")
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s:08d}", ignore_errors=True)

@@ -1,0 +1,256 @@
+"""Functional model of the photonic DPU datapath (paper §III-A / §V).
+
+A DPU executes a GEMM by:
+
+1. **Quantizing** operands to the digital precision (``operand_bits``, int8
+   for the paper's CNNs).
+2. **Bit-slicing** each operand into ``ceil(operand_bits / B)`` slices of the
+   analog precision ``B`` (paper §III: "If the supported value of B is less
+   than the precision requirement ... bit-slicing is applied").  Incoherent
+   photonics carries magnitudes; signs ride on the balanced-photodetector
+   differential rails — numerically we carry a signed magnitude slice.
+3. **Chunking** the dot-product (contraction) dimension into chunks of the
+   achievable DPE size ``N`` (from the scalability solver).  Each chunk's
+   analog summation produces a *psum* that is digitized by the ADC and
+   accumulated by the electronic reduction network.
+4. **Shift-adding** slice-pair passes (2^{B(s+t)} weights) and
+   **dequantizing**.
+
+With no noise/saturation enabled the model is *numerically exact*: it equals
+the integer GEMM of the quantized operands (tested).  Optional per-psum
+analog noise and ADC saturation model the analog non-idealities the paper's
+power-penalty analysis guards against.
+
+This module is the pure-jnp oracle; ``repro.kernels.photonic_gemm`` provides
+the TPU Pallas kernel with identical semantics (fused slicing + chunked
+accumulation in VMEM).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scalability
+from repro.core.params import PhotonicParams
+
+
+@dataclasses.dataclass(frozen=True)
+class DPUConfig:
+    """Operating point of a photonic DPU (organization + precision + rate)."""
+
+    organization: str = "SMWA"
+    bits: int = 4              # analog precision B per pass
+    operand_bits: int = 8      # digital operand precision (paper: int8 CNNs)
+    datarate_gs: float = 5.0   # symbol rate [GS/s]
+    dpe_size: Optional[int] = None   # N; None -> calibrated scalability solver
+    dpu_fanout: Optional[int] = None  # M; None -> = N (paper assumption)
+    noise_sigma_lsb: float = 0.0     # analog noise std per psum, in LSBs
+    adc_bits: Optional[int] = None   # ADC saturation range; None = ideal
+
+    @property
+    def n(self) -> int:
+        if self.dpe_size is not None:
+            return self.dpe_size
+        n = scalability.calibrated_max_n(
+            self.organization, self.bits, self.datarate_gs
+        )
+        if n <= 0:
+            raise ValueError(
+                f"infeasible operating point: {self.organization} B={self.bits} "
+                f"DR={self.datarate_gs} GS/s"
+            )
+        return n
+
+    @property
+    def m(self) -> int:
+        return self.dpu_fanout if self.dpu_fanout is not None else self.n
+
+    @property
+    def num_slices(self) -> int:
+        return -(-self.operand_bits // self.bits)  # ceil
+
+    @property
+    def passes(self) -> int:
+        """Slice-pair passes per GEMM element (inputs x weights)."""
+        return self.num_slices * self.num_slices
+
+    def num_chunks(self, k: int) -> int:
+        """psum chunks for a contraction of length k."""
+        return -(-k // self.n)
+
+
+# ---------------------------------------------------------------------------
+# Quantization
+# ---------------------------------------------------------------------------
+def quantize_symmetric(
+    x: jax.Array, bits: int, axis: Optional[int] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric linear quantization to signed ``bits`` integers.
+
+    Returns ``(q, scale)`` with ``x ~= q * scale``; ``q`` in
+    ``[-(2^{bits-1}-1), 2^{bits-1}-1]`` (int8 storage for bits<=8, int32
+    otherwise).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(x)) if axis is None else jnp.max(
+        jnp.abs(x), axis=axis, keepdims=True
+    )
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    dtype = jnp.int8 if bits <= 8 else jnp.int32
+    return q.astype(dtype), scale.astype(jnp.float32)
+
+
+def bit_slices(q: jax.Array, slice_bits: int, num_slices: int) -> jax.Array:
+    """Signed-magnitude bit-slice decomposition.
+
+    ``q == sum_s slices[s] * 2**(slice_bits * s)`` exactly, with
+    ``slices[s]`` in ``[-(2^slice_bits - 1), 2^slice_bits - 1]``.
+    Stacked on a new leading axis.
+    """
+    sgn = jnp.sign(q).astype(jnp.int32)
+    mag = jnp.abs(q.astype(jnp.int32))
+    mask = (1 << slice_bits) - 1
+    slices = [
+        (sgn * ((mag >> (slice_bits * s)) & mask)).astype(jnp.int8)
+        for s in range(num_slices)
+    ]
+    return jnp.stack(slices, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# The DPU integer GEMM (slice passes x psum chunks)
+# ---------------------------------------------------------------------------
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def dpu_int_gemm(
+    xq: jax.Array,  # (R, K) int8 — quantized inputs
+    wq: jax.Array,  # (K, C) int8 — quantized weights
+    cfg: DPUConfig,
+    *,
+    prng_key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Integer GEMM through the DPU datapath. Returns int32 (R, C).
+
+    Exactly equals ``xq.astype(i32) @ wq.astype(i32)`` when
+    ``noise_sigma_lsb == 0`` and ``adc_bits is None``.
+    """
+    r, k = xq.shape
+    k2, c = wq.shape
+    assert k == k2, (xq.shape, wq.shape)
+    n = cfg.n
+    s = cfg.num_slices
+
+    # psum chunking of the contraction dimension (electronic reduction).
+    xq = _pad_to(xq, 1, n)
+    wq = _pad_to(wq, 0, n)
+    kp = xq.shape[1]
+    chunks = kp // n
+    x_c = xq.reshape(r, chunks, n)
+    w_c = wq.reshape(chunks, n, c)
+
+    x_sl = bit_slices(x_c, cfg.bits, s)      # (S, R, chunks, N)
+    w_sl = bit_slices(w_c, cfg.bits, s)      # (S, chunks, N, C)
+
+    out = jnp.zeros((r, c), jnp.int32)
+    noise_idx = 0
+    for si in range(s):
+        for ti in range(s):
+            # Analog multiply-accumulate inside each chunk: one optical pass.
+            psum = jnp.einsum(
+                "rgn,gnc->rgc",
+                x_sl[si].astype(jnp.int32),
+                w_sl[ti].astype(jnp.int32),
+                preferred_element_type=jnp.int32,
+            )  # (R, chunks, C) — per-chunk psums, pre-ADC
+            if cfg.noise_sigma_lsb > 0.0:
+                if prng_key is None:
+                    raise ValueError("noise_sigma_lsb > 0 requires prng_key")
+                key = jax.random.fold_in(prng_key, noise_idx)
+                noise = jnp.round(
+                    cfg.noise_sigma_lsb
+                    * jax.random.normal(key, psum.shape, jnp.float32)
+                ).astype(jnp.int32)
+                psum = psum + noise
+                noise_idx += 1
+            if cfg.adc_bits is not None:
+                lim = 2 ** (cfg.adc_bits - 1) - 1
+                psum = jnp.clip(psum, -lim, lim)
+            shift = cfg.bits * (si + ti)
+            out = out + (psum.sum(axis=1) << shift)
+    return out
+
+
+def photonic_matmul(
+    x: jax.Array,  # (..., K) float
+    w: jax.Array,  # (K, C) float
+    cfg: DPUConfig = DPUConfig(),
+    *,
+    prng_key: Optional[jax.Array] = None,
+    w_scale_axis: Optional[int] = 0,
+) -> jax.Array:
+    """Float-in / float-out GEMM executed through the photonic DPU model."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    xr = x.reshape(-1, k)
+    xq, sx = quantize_symmetric(xr, cfg.operand_bits)
+    wq, sw = quantize_symmetric(w, cfg.operand_bits, axis=w_scale_axis)
+    out = dpu_int_gemm(xq, wq, cfg, prng_key=prng_key)
+    y = out.astype(jnp.float32) * sx * sw  # sw broadcasts (1, C) per-channel
+    return y.reshape(*lead, w.shape[1]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimator for training through the photonic path
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def photonic_matmul_ste(x: jax.Array, w: jax.Array, cfg: DPUConfig) -> jax.Array:
+    return photonic_matmul(x, w, cfg)
+
+
+def _ste_fwd(x, w, cfg):
+    return photonic_matmul(x, w, cfg), (x, w)
+
+
+def _ste_bwd(cfg, res, g):
+    x, w = res
+    lead = x.shape[:-1]
+    g2 = g.reshape(-1, g.shape[-1])
+    x2 = x.reshape(-1, x.shape[-1])
+    dx = (g2 @ w.T.astype(g2.dtype)).reshape(x.shape).astype(x.dtype)
+    dw = (x2.T.astype(g2.dtype) @ g2).astype(w.dtype)
+    return dx, dw
+
+
+photonic_matmul_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Noise sigma derived from the scalability analysis (for accuracy studies)
+# ---------------------------------------------------------------------------
+def noise_sigma_from_snr(
+    cfg: DPUConfig, params: Optional[PhotonicParams] = None
+) -> float:
+    """Analog noise std (in psum LSBs) implied by operating at ENOB = B.
+
+    The DPU is sized so the *per-symbol* SNR supports B bits; the psum of a
+    chunk spans ~N * (2^B-1)^2 levels, so half-LSB noise at B bits maps to a
+    psum-level sigma of ``sqrt(N) / 2`` quantization-equivalent steps spread
+    across the chunk (independent symbol noise accumulates in quadrature).
+    """
+    n = cfg.n
+    return math.sqrt(n) * 0.5

@@ -1,0 +1,142 @@
+"""DPU organizations (paper §III) and their circuit-level properties.
+
+The paper classifies incoherent MRR-based DPUs by the order in which the four
+optical-channel manipulation blocks appear:
+
+* **ASMW** — Aggregation, Splitting, Modulation, Weighting
+  (Crosslight, DEAP-CNN, Robin, RAMM)
+* **MASW** — Modulation, Aggregation, Splitting, Weighting
+  (Holylight, Yang, Al-Qadasi, PCNNA, RMAM)
+* **SMWA** — Splitting, Modulation, Weighting, Aggregation ("hitless")
+  (Hitless, ADEPT, Albireo)
+
+Each organization incurs a different set of crosstalk effects (Table II) and
+optical losses (Table III), composing into the per-organization network
+penalty ``P_penalty`` of Table IV.  This module encodes those tables
+declaratively and provides both the paper's *lumped* penalty (used by Eq. 3 /
+Table V) and a *structural* per-effect decomposition used by the circuit-level
+analysis benchmark.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.core.params import PhotonicParams
+
+# Block symbols
+SPLIT, AGG, MOD, WEIGHT, SUM = "S", "A", "M", "W", "Sigma"
+
+BLOCK_ORDERS: Dict[str, Tuple[str, ...]] = {
+    "ASMW": (AGG, SPLIT, MOD, WEIGHT, SUM),
+    "MASW": (MOD, AGG, SPLIT, WEIGHT, SUM),
+    "SMWA": (SPLIT, MOD, WEIGHT, AGG, SUM),
+}
+
+# Prior-work classification (paper Table I).
+PRIOR_WORK: Dict[str, Tuple[str, ...]] = {
+    "ASMW": ("Crosslight", "DEAP-CNN", "Robin", "RAMM"),
+    "MASW": ("Holylight", "Yang", "Al-Qadasi", "PCNNA", "RMAM"),
+    "SMWA": ("Hitless", "ADEPT", "Albireo"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CrosstalkProfile:
+    """Which crosstalk effects are present (paper Table II)."""
+
+    inter_modulation: bool
+    cross_weight: bool
+    filter_truncation: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class LossProfile:
+    """Qualitative loss levels (paper Table III) + structural device counts."""
+
+    through_loss_level: str      # "high" | "moderate" | "low"
+    propagation_loss_level: str  # "high" | "moderate" | "low"
+    # Number of out-of-resonance devices traversed by a channel before the
+    # BPD, as a function of DPE size N (paper §IV-B1).
+    #   ASMW: 2(N-1)   MASW: N   SMWA: 2
+    through_devices: str         # formula id: "2(N-1)" | "N" | "2"
+    # Relative waveguide-length factor for propagation loss (SMWA uses more,
+    # longer waveguides because of its hitless N*M layout; MASW shares one
+    # input array).  Multiplies N * d_mrr in the structural model.
+    waveguide_length_factor: float
+
+
+CROSSTALK: Dict[str, CrosstalkProfile] = {
+    "ASMW": CrosstalkProfile(True, True, False),
+    "MASW": CrosstalkProfile(False, True, True),
+    "SMWA": CrosstalkProfile(False, False, True),
+}
+
+LOSSES: Dict[str, LossProfile] = {
+    "ASMW": LossProfile("high", "moderate", "2(N-1)", 1.0),
+    "MASW": LossProfile("moderate", "low", "N", 0.75),
+    "SMWA": LossProfile("high", "high", "2", 1.5),
+}
+
+# Optimistic per-effect budgets assumed by the paper (§IV-C) when composing
+# P_penalty: inter-modulation <= 1 dB, cross-weight <= 3 dB, filter < 0.5 dB.
+EFFECT_BUDGET_DB = {
+    "inter_modulation": 1.0,
+    "cross_weight": 3.0,
+    "filter_truncation": 0.5,
+}
+
+
+def through_device_count(organization: str, n: int) -> int:
+    """Out-of-resonance devices traversed by one channel (paper §IV-B1)."""
+    org = organization.upper()
+    if org == "ASMW":
+        return 2 * (n - 1)
+    if org == "MASW":
+        return n
+    if org == "SMWA":
+        return 2
+    raise ValueError(f"unknown organization {organization!r}")
+
+
+def structural_penalty_db(
+    organization: str,
+    n: int,
+    params: PhotonicParams,
+) -> Dict[str, float]:
+    """Per-effect penalty decomposition (beyond-paper structural model).
+
+    The paper lumps crosstalk + filter + propagation into ``P_penalty``
+    (Table IV).  This reconstructs the composition from the per-effect
+    budgets of §IV-C and the structural loss model of §IV-B, so the
+    circuit-level analysis benchmark can show *where* each organization's
+    penalty comes from.  ``sum(values)`` approximates Table IV's lumped value
+    at the paper's operating point.
+    """
+    org = organization.upper()
+    xt = CROSSTALK[org]
+    loss = LOSSES[org]
+    parts = {
+        "inter_modulation": EFFECT_BUDGET_DB["inter_modulation"] if xt.inter_modulation else 0.0,
+        "cross_weight": EFFECT_BUDGET_DB["cross_weight"] if xt.cross_weight else 0.0,
+        "filter_truncation": EFFECT_BUDGET_DB["filter_truncation"] if xt.filter_truncation else 0.0,
+        # Propagation beyond the per-ring term already in Eq. 3: scaled by the
+        # organization's extra waveguide length.
+        "propagation": params.p_si_att_db_per_mm
+        * loss.waveguide_length_factor
+        * n
+        * params.d_mrr_mm,
+        # Through-loss differential vs the generic (N-1)+(N-1) terms of Eq.3.
+        "through_delta": (through_device_count(org, n) - 2 * (n - 1))
+        * params.p_mrm_obl_db,
+    }
+    return parts
+
+
+def lumped_penalty_db(organization: str, params: PhotonicParams) -> float:
+    """The paper's Table IV P_penalty — what Eq. 3 / Table V actually use."""
+    return params.penalty_db(organization)
+
+
+ORGANIZATIONS = ("ASMW", "MASW", "SMWA")

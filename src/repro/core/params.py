@@ -1,0 +1,155 @@
+"""Hardware constants for the photonic DPU analysis (paper Tables IV & VI)
+and for the TPU v5e roofline target.
+
+All photonic parameters come from Table IV of the paper (values credited to
+[27] Al-Qadasi et al. / [12] Vatsavai et al.).  Peripheral cost parameters
+come from Table VI.  Parameters the paper uses but does not tabulate
+(``P_SMF_att``, ``d_mrr_mm``, the noise-bandwidth convention) are exposed as
+fields of :class:`PhotonicParams` and frozen by a one-time calibration against
+Table V (see ``repro.core.scalability.calibrate``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+# ---------------------------------------------------------------------------
+# Physical constants
+# ---------------------------------------------------------------------------
+Q_ELECTRON = 1.602176634e-19  # C
+K_BOLTZMANN = 1.380649e-23    # J/K
+
+
+def dbm_to_watts(dbm: float) -> float:
+    return 1e-3 * 10.0 ** (dbm / 10.0)
+
+
+def watts_to_dbm(watts: float) -> float:
+    return 10.0 * math.log10(max(watts, 1e-30) / 1e-3)
+
+
+def db_to_linear(db: float) -> float:
+    return 10.0 ** (db / 10.0)
+
+
+# ---------------------------------------------------------------------------
+# Table IV — photonic link / scalability parameters
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PhotonicParams:
+    """Parameters of Eq. 1–3 (paper Table IV)."""
+
+    # Tabulated in Table IV -------------------------------------------------
+    p_laser_dbm: float = 10.0          # laser power intensity per channel
+    responsivity: float = 1.2          # PD responsivity R_s [A/W]
+    r_load: float = 50.0               # load resistance R_L [ohm]
+    i_dark: float = 35e-9              # dark current I_d [A]
+    temperature: float = 300.0         # absolute temperature T [K]
+    rin_db_per_hz: float = -140.0      # relative intensity noise [dB/Hz]
+    p_ec_il_db: float = 1.44           # fiber->chip coupling insertion loss [dB]
+    p_si_att_db_per_mm: float = 0.3    # Si waveguide propagation loss [dB/mm]
+    p_splitter_il_db: float = 0.01     # splitter insertion loss [dB] (per 1x2 stage)
+    p_mrm_il_db: float = 4.0           # microring modulator insertion loss [dB]
+    p_mrr_w_il_db: float = 0.01        # weight MRR insertion loss [dB]
+    p_mrm_obl_db: float = 0.01         # MRM out-of-band (through) loss [dB]
+    p_mrr_w_obl_db: float = 0.01       # weight-MRR out-of-band (through) loss [dB]
+
+    # Organization-dependent network penalties (Table IV, P_Penalty) --------
+    penalty_asmw_db: float = 5.8
+    penalty_masw_db: float = 4.8
+    penalty_smwa_db: float = 1.8
+
+    # Spectral parameters (Sec. IV-C) ---------------------------------------
+    fsr_nm: float = 50.0               # free spectral range
+    fwhm_nm: float = 0.7               # filter full-width half-maximum
+    channel_spacing_factor: float = 0.4  # spacing = 0.4 x FWHM
+
+    # Under-specified in the paper; frozen by calibration --------------------
+    p_smf_att_db: float = 0.0          # single-mode fiber attenuation [dB]
+    d_mrr_mm: float = 0.02             # MRR diameter (waveguide length per ring) [mm]
+    # noise bandwidth = DR / bw_divisor  (paper writes sqrt(DR/sqrt(2)))
+    bw_divisor: float = math.sqrt(2.0)
+
+    @property
+    def rin_linear_per_hz(self) -> float:
+        return db_to_linear(self.rin_db_per_hz)
+
+    # Paper states spacing "0.25nm (= 0.4 x 0.7)" (arithmetic says 0.28; the
+    # paper rounds to 0.25 to get the FSR-limited N = 200). We honour the
+    # paper's stated 0.25 nm / N=200.
+    channel_spacing_nm: float = 0.25
+
+    @property
+    def fsr_limited_n(self) -> int:
+        """Max WDM channel count allowed by the FSR (paper: 200)."""
+        return int(round(self.fsr_nm / self.channel_spacing_nm))
+
+    def penalty_db(self, organization: str) -> float:
+        return {
+            "ASMW": self.penalty_asmw_db,
+            "MASW": self.penalty_masw_db,
+            "SMWA": self.penalty_smwa_db,
+        }[organization.upper()]
+
+
+# ---------------------------------------------------------------------------
+# Table VI — accelerator peripheral cost model
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PeripheralCost:
+    power_w: float      # static/active power [W]
+    latency_s: float    # per-use latency [s]
+    area_mm2: float     # area [mm^2]
+
+
+@dataclasses.dataclass(frozen=True)
+class PeripheralParams:
+    """Table VI — peripherals and DPU parameters (from [12])."""
+
+    reduction_network: PeripheralCost = PeripheralCost(0.050e-3, 3.125e-9, 3.00e-5)
+    activation_unit: PeripheralCost = PeripheralCost(0.52e-3, 0.78e-9, 6.00e-5)
+    io_interface: PeripheralCost = PeripheralCost(140.18e-3, 0.78e-9, 2.44e-2)
+    pooling_unit: PeripheralCost = PeripheralCost(0.4e-3, 3.125e-9, 2.40e-4)
+    edram: PeripheralCost = PeripheralCost(41.1e-3, 1.56e-9, 1.66e-1)
+    bus: PeripheralCost = PeripheralCost(7e-3, 5 * 0.78e-9, 9.00e-3)       # 5 cycles
+    router: PeripheralCost = PeripheralCost(42e-3, 2 * 0.78e-9, 1.50e-2)   # 2 cycles
+    dac: PeripheralCost = PeripheralCost(12.5e-3, 0.78e-9, 2.50e-3)
+    adc_1gs: PeripheralCost = PeripheralCost(2.55e-3, 0.78e-9, 2e-3)
+    adc_5gs: PeripheralCost = PeripheralCost(11e-3, 0.78e-9, 21e-3)
+    adc_10gs: PeripheralCost = PeripheralCost(30e-3, 0.78e-9, 103e-3)
+    # Tuning: power per FSR of shift, latency per actuation.
+    eo_tuning_w_per_fsr: float = 80e-6
+    eo_tuning_latency_s: float = 20e-9
+    to_tuning_w_per_fsr: float = 275e-3
+    to_tuning_latency_s: float = 4e-6
+    # Laser: 10 dBm per wavelength channel (Table IV / Sec. V-B).
+    laser_w_per_channel: float = dbm_to_watts(10.0)
+    # MRR active area (typical 20um ring + driver pitch) for area model.
+    mrr_area_mm2: float = 4.0e-4
+    pd_area_mm2: float = 1.0e-4
+
+    def adc(self, datarate_gs: float) -> PeripheralCost:
+        if datarate_gs <= 1:
+            return self.adc_1gs
+        if datarate_gs <= 5:
+            return self.adc_5gs
+        return self.adc_10gs
+
+
+# ---------------------------------------------------------------------------
+# TPU v5e roofline constants (per system prompt)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TPUv5eParams:
+    peak_flops_bf16: float = 197e12    # FLOP/s per chip
+    hbm_bandwidth: float = 819e9       # B/s per chip
+    ici_bandwidth: float = 50e9        # B/s per link
+    hbm_bytes: float = 16e9            # HBM capacity per chip
+    vmem_bytes: float = 128 * 2 ** 20  # ~128 MiB VMEM
+    mxu_dim: int = 128                 # systolic array tile
+
+
+DEFAULT_PHOTONIC = PhotonicParams()
+DEFAULT_PERIPHERALS = PeripheralParams()
+TPU_V5E = TPUv5eParams()

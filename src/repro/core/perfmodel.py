@@ -1,0 +1,183 @@
+"""Analytical cost model of the photonic GEMM accelerator (paper §V).
+
+Latency/energy/area per component follow Table VI; organization-dependent
+ring counts follow the Fig. 2 structures.  The system-level configuration
+(DPU size N and area-proportionate DPU count per organization x datarate)
+comes from Table V — the paper's own area matching; our independent area
+model is reported alongside as a cross-check (benchmarks/table5_dpu.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from repro.core import scalability
+from repro.core.params import DEFAULT_PERIPHERALS, PeripheralParams, dbm_to_watts
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorConfig:
+    organization: str = "SMWA"
+    datarate_gs: float = 1.0
+    bits: int = 4             # analog precision B
+    operand_bits: int = 8     # CNN quantization
+    n: int = 83               # DPE size (fan-in)
+    m: int = 83               # DPEs per DPU (fan-out)
+    dpu_count: int = 50
+    dpus_per_tile: int = 4
+    peripherals: PeripheralParams = DEFAULT_PERIPHERALS
+
+    @property
+    def symbol_s(self) -> float:
+        return 1e-9 / self.datarate_gs
+
+    @property
+    def passes(self) -> int:
+        s = -(-self.operand_bits // self.bits)
+        return s * s
+
+    @property
+    def tiles(self) -> int:
+        return -(-self.dpu_count // self.dpus_per_tile)
+
+    # ---- weight-update tuning ----------------------------------------------
+    # Weight updates use EO tuning (Table VI: 20 ns, 80 uW/FSR) for ALL
+    # organizations; TO tuning is the slow thermal bias path.  (We tested an
+    # org-dependent "hitless SMWA = EO, others = TO" model — it overshoots
+    # the paper's ratios by more than an order of magnitude; recorded as a
+    # refuted hypothesis in EXPERIMENTS.md §Paper-validation.)
+    @property
+    def tune_latency_s(self) -> float:
+        return self.peripherals.eo_tuning_latency_s
+
+    @property
+    def tune_power_w_per_ring(self) -> float:
+        return self.peripherals.eo_tuning_w_per_fsr * 0.5
+
+    # ---- organization-dependent ring counts per DPU (Fig. 2) --------------
+    @property
+    def rings_per_dpu(self) -> int:
+        n, m = self.n, self.m
+        org = self.organization.upper()
+        if org == "ASMW":   # M waveguides x (N MRM + N MRR)
+            return 2 * n * m
+        if org == "MASW":   # shared N-MRM input array + M x N weight MRRs
+            return n + n * m
+        # SMWA: N*M MRM + N*M MRR + M x (N-ring mux)
+        return 3 * n * m
+
+    @property
+    def dacs_per_dpu(self) -> int:
+        # Input drivers are shared across the M fan-out copies.
+        return self.n
+
+    @property
+    def adcs_per_dpu(self) -> int:
+        return self.m  # one per DPE/BPD
+
+    # ---- area --------------------------------------------------------------
+    def dpu_area_mm2(self) -> float:
+        p = self.peripherals
+        adc = p.adc(self.datarate_gs).area_mm2
+        return (
+            self.rings_per_dpu * p.mrr_area_mm2
+            + self.adcs_per_dpu * (adc + p.pd_area_mm2)
+            + self.dacs_per_dpu * p.dac.area_mm2
+        )
+
+    def tile_overhead_mm2(self) -> float:
+        p = self.peripherals
+        return (
+            p.reduction_network.area_mm2
+            + p.activation_unit.area_mm2
+            + p.pooling_unit.area_mm2
+            + p.edram.area_mm2
+            + p.bus.area_mm2
+            + p.router.area_mm2
+        )
+
+    def total_area_mm2(self) -> float:
+        return (
+            self.dpu_count * self.dpu_area_mm2()
+            + self.tiles * self.tile_overhead_mm2()
+            + self.peripherals.io_interface.area_mm2
+        )
+
+    # ---- power -------------------------------------------------------------
+    def laser_power_w(self) -> float:
+        """Laser wall power: N wavelengths per DPU (10 dBm each, shared
+        across the M DPEs by the splitting block), at 20% wall-plug eff."""
+        return self.dpu_count * self.n * dbm_to_watts(10.0) / 0.2
+
+    def static_power_w(self) -> float:
+        p = self.peripherals
+        per_tile = (
+            p.reduction_network.power_w
+            + p.activation_unit.power_w
+            + p.pooling_unit.power_w
+            + p.edram.power_w
+            + p.bus.power_w
+            + p.router.power_w
+        )
+        return (
+            self.tiles * per_tile
+            + p.io_interface.power_w
+            + self.laser_power_w()
+        )
+
+    def streaming_power_w(self) -> float:
+        """DAC+ADC power while a DPU streams symbols."""
+        p = self.peripherals
+        adc = p.adc(self.datarate_gs).power_w
+        return self.dacs_per_dpu * p.dac.power_w + self.adcs_per_dpu * adc
+
+    # ---- convenience -------------------------------------------------------
+    @staticmethod
+    def from_paper(organization: str, datarate_gs: float) -> "AcceleratorConfig":
+        """Operating point from Table V (B=4)."""
+        key = (organization.upper(), int(datarate_gs))
+        n = scalability.TABLE_V_N[key]
+        count = scalability.TABLE_V_COUNT[key]
+        return AcceleratorConfig(
+            organization=organization.upper(),
+            datarate_gs=datarate_gs,
+            n=n,
+            m=n,
+            dpu_count=count,
+        )
+
+    @staticmethod
+    def from_scalability(
+        organization: str, datarate_gs: float, bits: int = 4, dpu_count: int = 50
+    ) -> "AcceleratorConfig":
+        """Operating point from OUR calibrated solver (cross-check path)."""
+        n = scalability.calibrated_max_n(organization, bits, datarate_gs)
+        return AcceleratorConfig(
+            organization=organization.upper(),
+            datarate_gs=datarate_gs,
+            bits=bits,
+            n=n,
+            m=n,
+            dpu_count=dpu_count,
+        )
+
+
+def area_matched_counts(datarate_gs: float, base: AcceleratorConfig | None = None) -> Dict[str, int]:
+    """Our area model's DPU counts matching SMWA's area (cross-check of the
+    paper's area-proportionate analysis, Table V bottom rows)."""
+    base = base or AcceleratorConfig.from_paper("SMWA", datarate_gs)
+    target = base.total_area_mm2()
+    out = {"SMWA": base.dpu_count}
+    for org in ("ASMW", "MASW"):
+        cfg = AcceleratorConfig.from_paper(org, datarate_gs)
+        lo, hi = 1, 100000
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if dataclasses.replace(cfg, dpu_count=mid).total_area_mm2() <= target:
+                lo = mid
+            else:
+                hi = mid - 1
+        out[org] = lo
+    return out

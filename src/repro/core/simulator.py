@@ -1,0 +1,191 @@
+"""Transaction-level, event-driven simulator of the photonic GEMM
+accelerator (paper §V-B: "custom, transaction-level, event-driven
+Python-based simulator").
+
+Execution model (output-stationary, batch=1 CNN inference):
+
+* each layer's im2col GEMM is tiled into *weight tiles* — (psum-chunk of the
+  k dimension) x (M output columns) — per bit-slice pass;
+* a weight tile is programmed onto a DPU's weight MRRs (EO tuning latency),
+  then the layer's `rows` input vectors stream through at the symbol rate,
+  producing one psum per row per DPE;
+* tiles are dispatched to the earliest-free DPU (greedy list scheduling via
+  a heap — the transaction/event queue);
+* psums funnel through each tile's electronic reduction network
+  (Table VI latency/energy); reduction time overlaps streaming and the layer
+  completes at max(stream, reduce) + drain;
+* layers execute in dependency order (batch=1), energy integrates DAC/ADC
+  streaming power, laser + peripheral static power, tuning and reduction
+  energy, and eDRAM/NoC transfers for psums.
+
+Depthwise convs map one k=9 dot per DPE (an analog DPE cannot share its
+summation across independent dots), so large-N DPUs waste N-9 rings there —
+the model charges full-DPE occupancy, matching the paper's observation that
+psum/utilization effects, not raw N, drive the final FPS ordering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List
+
+from repro.core.cnn_workloads import WORKLOADS, GemmLayer
+from repro.core.perfmodel import AcceleratorConfig
+
+
+@dataclasses.dataclass
+class LayerStats:
+    name: str
+    time_s: float
+    stream_s: float
+    reduce_s: float
+    tune_s: float
+    energy_j: float
+    psums: int
+    tiles_dispatched: int
+
+
+@dataclasses.dataclass
+class SimResult:
+    model: str
+    config: AcceleratorConfig
+    total_time_s: float
+    dynamic_energy_j: float
+    static_power_w: float
+    layers: List[LayerStats]
+
+    @property
+    def fps(self) -> float:
+        return 1.0 / self.total_time_s
+
+    @property
+    def avg_power_w(self) -> float:
+        return self.static_power_w + self.dynamic_energy_j / self.total_time_s
+
+    @property
+    def fps_per_w(self) -> float:
+        return self.fps / self.avg_power_w
+
+    def fps_per_w_per_mm2(self) -> float:
+        return self.fps_per_w / self.config.total_area_mm2()
+
+
+def _simulate_layer(layer: GemmLayer, cfg: AcceleratorConfig) -> LayerStats:
+    p = cfg.peripherals
+    sym = cfg.symbol_s
+    tune = cfg.tune_latency_s  # org-dependent: hitless SMWA = EO, else TO
+
+    if layer.groups == 1:
+        chunks = -(-layer.k // cfg.n)
+        col_tiles = -(-layer.cols // cfg.m)
+        rows = layer.rows
+        psums_per_output = chunks * cfg.passes
+        outputs = layer.rows * layer.cols
+    else:
+        # depthwise: each output channel is an independent k-dot; a DPE holds
+        # one dot -> M channels per DPU tile-slot (N-9 rings idle).
+        chunks = 1
+        col_tiles = -(-layer.groups // cfg.m)
+        rows = layer.rows
+        psums_per_output = cfg.passes
+        outputs = layer.rows * layer.groups
+    n_tiles = chunks * col_tiles * cfg.passes
+
+    # --- event loop: output-stationary dispatch (paper §V-B) ---------------
+    # Each output-column tile is OWNED by one DPU: its psums accumulate
+    # locally across the chunks x passes weight tiles, which therefore run
+    # *sequentially* on that DPU (an analog DPE cannot merge psums from a
+    # sibling DPU without a cross-DPU reduction round-trip).  The serial
+    # chain per output tile is ceil(k/N) * passes weight tiles long.
+    #
+    # Chunked dots additionally pace at the psum-reduction clock: every
+    # symbol's psum must round-trip the 320 MHz accumulation FIFO (Table VI
+    # reduction network) before the next chunk's contribution can merge, so
+    # the effective symbol time is max(1/DR, 3.125 ns) when chunks > 1.
+    # Dots that fit one DPE (k <= N) skip the FIFO and stream at full DR —
+    # this is what the paper means by "larger N generates less psums which
+    # reduces the use of the psum reduction network": at high datarates the
+    # fixed reduction clock throttles small-N organizations on every
+    # chunked layer, and N shrinks with datarate (Table V), which is why
+    # absolute FPS *decreases* with DR for all organizations (Fig. 7a).
+    sym_eff = max(sym, p.reduction_network.latency_s) if chunks > 1 else sym
+    serial_dur = chunks * cfg.passes * (tune + rows * sym_eff)
+    heap = [(0.0, d) for d in range(cfg.dpu_count)]
+    heapq.heapify(heap)
+    end = 0.0
+    busy_s = 0.0
+    for _ in range(col_tiles):
+        free, d = heapq.heappop(heap)
+        fin = free + serial_dur
+        busy_s += serial_dur
+        end = max(end, fin)
+        heapq.heappush(heap, (fin, d))
+    stream_s = end
+
+    # --- psum accounting ----------------------------------------------------
+    total_psums = outputs * psums_per_output
+    reductions = outputs * (psums_per_output - 1) if psums_per_output > 1 else 0
+    red_s = (
+        (sym_eff - sym) * rows * chunks * cfg.passes if chunks > 1 else 0.0
+    )  # throttle attributable to the reduction clock (reported per layer)
+    time_s = stream_s + p.reduction_network.latency_s
+
+    # --- energy -------------------------------------------------------------
+    adc = p.adc(cfg.datarate_gs)
+    stream_energy = busy_s * cfg.streaming_power_w()
+    tune_energy = n_tiles * (
+        cfg.tune_power_w_per_ring * tune * (cfg.n * cfg.m if layer.groups == 1 else cfg.m)
+    )
+    red_energy = reductions * p.reduction_network.power_w * p.reduction_network.latency_s
+    # psum + activation movement: eDRAM write/read + bus per psum word
+    mem_energy = total_psums * (
+        p.edram.power_w * p.edram.latency_s + p.bus.power_w * p.bus.latency_s / cfg.m
+    )
+    act_energy = outputs * p.activation_unit.power_w * p.activation_unit.latency_s
+    energy = stream_energy + tune_energy + red_energy + mem_energy + act_energy
+
+    return LayerStats(
+        name=layer.name,
+        time_s=time_s,
+        stream_s=stream_s,
+        reduce_s=red_s,
+        tune_s=n_tiles * tune / cfg.dpu_count,
+        energy_j=energy,
+        psums=total_psums,
+        tiles_dispatched=n_tiles,
+    )
+
+
+def simulate(model: str, cfg: AcceleratorConfig) -> SimResult:
+    layers = [_simulate_layer(l, cfg) for l in WORKLOADS[model]()]
+    total = sum(l.time_s for l in layers)
+    energy = sum(l.energy_j for l in layers)
+    return SimResult(
+        model=model,
+        config=cfg,
+        total_time_s=total,
+        dynamic_energy_j=energy,
+        static_power_w=cfg.static_power_w(),
+        layers=layers,
+    )
+
+
+def evaluate_all(
+    organizations=("ASMW", "MASW", "SMWA"),
+    datarates=(1, 5, 10),
+    models=tuple(WORKLOADS),
+    use_paper_operating_points: bool = True,
+) -> Dict:
+    """Fig. 7 sweep: (org x DR x CNN) -> SimResult."""
+    out = {}
+    for org in organizations:
+        for dr in datarates:
+            cfg = (
+                AcceleratorConfig.from_paper(org, dr)
+                if use_paper_operating_points
+                else AcceleratorConfig.from_scalability(org, dr)
+            )
+            for m in models:
+                out[(org, dr, m)] = simulate(m, cfg)
+    return out

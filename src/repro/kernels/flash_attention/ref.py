@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash-attention kernel: exact softmax attention
+with GQA head grouping, causal masking and kv-length masking."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Tq, H, hd)
+    k: jax.Array,  # (B, Tk, KV, hd)
+    v: jax.Array,  # (B, Tk, KV, hd)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    kv_valid: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    b, tq, h, hd = q.shape
+    _, tk, kvh, _ = k.shape
+    rep = h // kvh
+    scale = scale if scale is not None else hd ** -0.5
+    kf = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32) * scale, kf)
+    kv_pos = jnp.arange(tk)
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        q_pos = q_offset + jnp.arange(tq)
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if kv_valid is not None:
+        mask &= (kv_pos < kv_valid)[None, :]
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,145 @@
+"""Pallas TPU kernel for the photonic (bit-sliced, psum-chunked) GEMM.
+
+TPU-native adaptation of the paper's DPU datapath (DESIGN.md §3):
+
+* the DPE size ``N`` becomes the psum chunk along the contraction dim — each
+  chunk's int32 partial sum models one analog summation + ADC event and can
+  be saturated to ``adc_bits`` like the real converter;
+* the fan-out ``M`` becomes the output-column tile — ``M`` parallel DPEs map
+  onto MXU output columns;
+* operand bit-slices (``ceil(operand_bits/B)`` per operand) are extracted
+  *inside* the kernel from int8 residents of VMEM, so HBM traffic stays int8
+  (one read per operand) while the MXU consumes one slice-pair per pass —
+  mirroring the temporal passes of the photonic DPU.
+
+Blocking: grid ``(R/TR, C/TC, K/TK)`` with the K axis innermost so the output
+tile stays resident in VMEM and accumulates across K-tiles (standard Pallas
+matmul accumulation).  ``TK`` must be a multiple of ``n_chunk``; MXU-aligned
+tiles (multiples of 128) are used when ADC fidelity is off (chunking is then
+numerically irrelevant), and exact-N chunks when it is on.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    x_ref,
+    w_ref,
+    out_ref,
+    *,
+    slice_bits: int,
+    num_slices: int,
+    n_chunk: int,
+    adc_bits: Optional[int],
+):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.int32)  # (TR, TK)
+    w = w_ref[...].astype(jnp.int32)  # (TK, TC)
+    tr, tk = x.shape
+    _, tc = w.shape
+    chunks = tk // n_chunk
+
+    sgn_x, mag_x = jnp.sign(x), jnp.abs(x)
+    sgn_w, mag_w = jnp.sign(w), jnp.abs(w)
+    mask = (1 << slice_bits) - 1
+
+    acc = jnp.zeros((tr, tc), jnp.int32)
+    for si in range(num_slices):
+        xs = sgn_x * ((mag_x >> (slice_bits * si)) & mask)
+        for ti in range(num_slices):
+            ws = sgn_w * ((mag_w >> (slice_bits * ti)) & mask)
+            shift = slice_bits * (si + ti)
+            if adc_bits is None and chunks >= 1:
+                # Ideal ADC: chunk boundaries are numerically irrelevant —
+                # one MXU pass over the whole K-tile.
+                psum = jax.lax.dot_general(
+                    xs,
+                    ws,
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32,
+                )
+                acc = acc + (psum << shift)
+            else:
+                # DPU-faithful: saturate each N-size chunk psum at the ADC.
+                lim = 2 ** (adc_bits - 1) - 1
+                for g in range(chunks):
+                    sl = slice(g * n_chunk, (g + 1) * n_chunk)
+                    psum = jax.lax.dot_general(
+                        xs[:, sl],
+                        ws[sl, :],
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.int32,
+                    )
+                    psum = jnp.clip(psum, -lim, lim)
+                    acc = acc + (psum << shift)
+    out_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "slice_bits",
+        "num_slices",
+        "n_chunk",
+        "adc_bits",
+        "tile_r",
+        "tile_c",
+        "tile_k",
+        "interpret",
+    ),
+)
+def photonic_gemm_pallas(
+    xq: jax.Array,  # (R, K) int8, R % tile_r == 0, K % tile_k == 0
+    wq: jax.Array,  # (K, C) int8, C % tile_c == 0
+    *,
+    slice_bits: int = 4,
+    num_slices: int = 2,
+    n_chunk: int = 128,
+    adc_bits: Optional[int] = None,
+    tile_r: int = 128,
+    tile_c: int = 128,
+    tile_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    r, k = xq.shape
+    _, c = wq.shape
+    assert r % tile_r == 0 and c % tile_c == 0 and k % tile_k == 0, (
+        xq.shape,
+        wq.shape,
+        (tile_r, tile_c, tile_k),
+    )
+    assert tile_k % n_chunk == 0, (tile_k, n_chunk)
+
+    grid = (r // tile_r, c // tile_c, k // tile_k)
+    kernel = functools.partial(
+        _kernel,
+        slice_bits=slice_bits,
+        num_slices=num_slices,
+        n_chunk=n_chunk,
+        adc_bits=adc_bits,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_k, tile_c), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, tile_c), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(xq, wq)

@@ -1,0 +1,128 @@
+"""Public jit'd entry points for the photonic GEMM kernel.
+
+``photonic_gemm(x, w, cfg)`` — float in/out, quantize → kernel → dequantize.
+Backend selection:
+
+* ``"pallas"``   — the Pallas TPU kernel (interpret mode on CPU hosts);
+* ``"ref"``      — the pure-jnp oracle (portable, differentiably wrapped);
+* ``"exact"``    — plain int GEMM of the quantized operands (the ideal the
+                   DPU converges to; useful as an upper bound in tests).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dpu import DPUConfig, quantize_symmetric
+from repro.kernels.photonic_gemm.kernel import photonic_gemm_pallas
+from repro.kernels.photonic_gemm.ref import exact_int_gemm, photonic_gemm_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def photonic_gemm_int(
+    xq: jax.Array,
+    wq: jax.Array,
+    cfg: DPUConfig,
+    *,
+    backend: str = "pallas",
+    interpret: Optional[bool] = None,
+    tile_r: int = 128,
+    tile_c: int = 128,
+) -> jax.Array:
+    """Integer-level DPU GEMM with automatic padding to kernel tiles."""
+    if backend == "exact":
+        return exact_int_gemm(xq, wq)
+
+    n = cfg.n
+    if backend == "ref":
+        return photonic_gemm_ref(
+            xq,
+            wq,
+            slice_bits=cfg.bits,
+            num_slices=cfg.num_slices,
+            n_chunk=n,
+            adc_bits=cfg.adc_bits,
+        )
+
+    assert backend == "pallas", backend
+    if interpret is None:
+        interpret = _on_cpu()
+    r, k = xq.shape
+    _, c = wq.shape
+    if cfg.adc_bits is None:
+        # Chunking numerically irrelevant -> MXU-aligned tiles.
+        n_chunk = 128
+        tile_k = 512 if k >= 512 else _round_up(max(k, 128), 128)
+        n_chunk = min(n_chunk, tile_k)
+    else:
+        # DPU-faithful chunking at the achievable DPE size N.
+        n_chunk = n
+        per_tile = max(1, 512 // n)
+        tile_k = n * per_tile
+    tile_r = min(tile_r, _round_up(r, 8))
+    tile_c = min(tile_c, _round_up(c, 128))
+
+    rp, kp, cp = _round_up(r, tile_r), _round_up(k, tile_k), _round_up(c, tile_c)
+    xp = jnp.pad(xq, ((0, rp - r), (0, kp - k)))
+    wp = jnp.pad(wq, ((0, kp - k), (0, cp - c)))
+    out = photonic_gemm_pallas(
+        xp,
+        wp,
+        slice_bits=cfg.bits,
+        num_slices=cfg.num_slices,
+        n_chunk=n_chunk,
+        adc_bits=cfg.adc_bits,
+        tile_r=tile_r,
+        tile_c=tile_c,
+        tile_k=tile_k,
+        interpret=interpret,
+    )
+    return out[:r, :c]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def photonic_gemm(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: DPUConfig = DPUConfig(),
+    backend: str = "pallas",
+) -> jax.Array:
+    """Float GEMM through the photonic DPU. Differentiable via STE."""
+    return _photonic_gemm_fwd_impl(x, w, cfg, backend)
+
+
+def _photonic_gemm_fwd_impl(x, w, cfg, backend):
+    lead = x.shape[:-1]
+    xr = x.reshape(-1, x.shape[-1])
+    xq, sx = quantize_symmetric(xr, cfg.operand_bits)
+    wq, sw = quantize_symmetric(w, cfg.operand_bits, axis=0)
+    out = photonic_gemm_int(xq, wq, cfg, backend=backend)
+    y = out.astype(jnp.float32) * sx * sw
+    return y.reshape(*lead, w.shape[1]).astype(x.dtype)
+
+
+def _fwd(x, w, cfg, backend):
+    return _photonic_gemm_fwd_impl(x, w, cfg, backend), (x, w)
+
+
+def _bwd(cfg, backend, res, g):
+    x, w = res
+    g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    dx = (g2 @ w.astype(jnp.float32).T).reshape(x.shape).astype(x.dtype)
+    dw = (x2.T @ g2).astype(w.dtype)
+    return dx, dw
+
+
+photonic_gemm.defvjp(_fwd, _bwd)

@@ -1,0 +1,238 @@
+"""Static analysis of compiled HLO text: collective-communication bytes.
+
+``compiled.cost_analysis()`` has no collective term, so the roofline's
+collective component is derived here by parsing ``compiled.as_text()``:
+
+* every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all``
+  / ``collective-permute`` op contributes *wire bytes* (ring-algorithm
+  estimates based on its printed shape and replica-group size);
+* ops inside ``while`` bodies (from ``lax.scan`` over layers/chunks) are
+  multiplied by the loop trip count, recovered from the loop-condition
+  computation — nested loops multiply.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\("
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)(?:.*?)condition=%?([\w.\-]+).*?body=%?([\w.\-]+)", re.S
+)
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Total bytes of a shape string like 'bf16[2,512,4096]' or a tuple."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> Optional[int]:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _EXPLICIT_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    computation: str
+    out_bytes: float
+    wire_bytes: float
+    group_size: Optional[int]
+    multiplier: float = 1.0
+
+
+def _wire_bytes(kind: str, out_bytes: float, group: Optional[int]) -> float:
+    """Ring-algorithm wire-byte estimate per device."""
+    g = group or 2
+    frac = (g - 1) / g
+    if kind.startswith("all-gather"):
+        return out_bytes * frac                  # receive full output minus own shard
+    if kind.startswith("all-reduce"):
+        return 2.0 * out_bytes * frac            # reduce-scatter + all-gather
+    if kind == "reduce-scatter":
+        return out_bytes * (g - 1)  # operand (= out * g) times (g-1)/g
+    if kind == "all-to-all":
+        return out_bytes * frac
+    if kind.startswith("collective-permute"):
+        return out_bytes
+    return out_bytes
+
+
+def parse_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its lines."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Largest s32 constant in the loop condition ~= trip count."""
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def computation_multipliers(hlo: str) -> Dict[str, float]:
+    """Loop-nest multiplier for every computation (entry = 1)."""
+    comps = parse_computations(hlo)
+    # while edges: parent computation -> (body, trip)
+    edges: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            if " while(" in line:
+                m = _WHILE_RE.search(line)
+                if m:
+                    cond, body = m.group(1), m.group(2)
+                    trip = _trip_count(comps.get(cond, []))
+                    edges[name].append((body, trip))
+                    edges[name].append((cond, trip))
+
+    mult: Dict[str, float] = {name: 1.0 for name in comps}
+    # propagate: iterate to fixpoint (loop nests are shallow)
+    for _ in range(10):
+        changed = False
+        for parent, children in edges.items():
+            for child, trip in children:
+                want = mult.get(parent, 1.0) * trip
+                if mult.get(child, 1.0) < want:
+                    mult[child] = want
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+def collect_collectives(hlo: str) -> List[CollectiveOp]:
+    comps = parse_computations(hlo)
+    mult = computation_multipliers(hlo)
+    ops: List[CollectiveOp] = []
+    for comp, lines in comps.items():
+        m_c = mult.get(comp, 1.0)
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            shape_str, kind = m.group(1), m.group(2)
+            if kind.endswith("-start"):
+                kind = kind[: -len("-start")]
+            out_b = _shape_bytes(shape_str)
+            grp = _group_size(line)
+            ops.append(
+                CollectiveOp(
+                    kind=kind,
+                    computation=comp,
+                    out_bytes=out_b,
+                    wire_bytes=_wire_bytes(kind, out_b, grp),
+                    group_size=grp,
+                    multiplier=m_c,
+                )
+            )
+    return ops
+
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)[\(.]"
+)
+_PARAM_SIG_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^()]*\)|[a-z0-9]+\[[\d,]*\])(?:\{[^}]*\})?)")
+_DOT_ARGS_RE = re.compile(r"\bdot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)")
+
+
+def matmul_traffic_bytes(hlo: str) -> float:
+    """Fusion-optimal HBM-traffic estimate: every `dot`'s operands + output
+    cross HBM once (elementwise chains assumed fused away), times the
+    enclosing loop multiplier.  An optimistic-but-TPU-realistic memory bound
+    to complement XLA's unfused 'bytes accessed'."""
+    comps = parse_computations(hlo)
+    mult = computation_multipliers(hlo)
+    # symbol table: op name -> shape string (defs + computation params)
+    shapes: Dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                shapes[m.group(1)] = m.group(2)
+            if "parameter(" in line:
+                pm = re.match(r"\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+parameter", line)
+                if pm:
+                    shapes[pm.group(1)] = pm.group(2)
+    total = 0.0
+    for comp, lines in comps.items():
+        m_c = mult.get(comp, 1.0)
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm or dm.group(3) != "dot":
+                continue
+            out_b = _shape_bytes(dm.group(2))
+            am = _DOT_ARGS_RE.search(line)
+            op_b = 0.0
+            if am:
+                for name in am.groups():
+                    op_b += _shape_bytes(shapes.get(name, ""))
+            total += (out_b + op_b) * m_c
+    return total
+
+
+def collective_summary(hlo: str) -> Dict[str, float]:
+    """Total wire bytes per device, by kind and overall (loop-adjusted)."""
+    ops = collect_collectives(hlo)
+    by_kind: Dict[str, float] = defaultdict(float)
+    count: Dict[str, int] = defaultdict(int)
+    for op in ops:
+        by_kind[op.kind] += op.wire_bytes * op.multiplier
+        count[op.kind] += 1
+    out = {f"bytes_{k}": v for k, v in by_kind.items()}
+    out.update({f"count_{k}": float(v) for k, v in count.items()})
+    out["total_wire_bytes"] = sum(by_kind.values())
+    return out

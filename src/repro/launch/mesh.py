@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state.  The single-pod mesh is
+16x16 = 256 chips (one v5e pod's worth for this exercise); multi-pod adds a
+leading "pod" axis (2 pods = 512 chips).  The `pod` axis carries outer data
+parallelism (gradient all-reduce crosses the inter-pod DCN once per step);
+`model` is tensor/expert parallel and stays ICI-local.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (for CPU smoke tests)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+
+
+def require_devices(n: int) -> None:
+    have = len(jax.devices())
+    if have < n:
+        raise RuntimeError(
+            f"need {n} devices but have {have}. The dry-run launcher must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE "
+            "importing jax (repro.launch.dryrun does this)."
+        )

@@ -1,0 +1,446 @@
+"""Attention variants: GQA (+RoPE, qkv-bias), MLA (DeepSeek-V2), cross-attn.
+
+Train/prefill use a chunked (flash-style) online-softmax scan over KV blocks
+— O(T) memory, the TPU-friendly pattern.  Decode consumes a KV cache updated
+in place; cache layouts carry logical sharding axes so long-context caches
+sequence-shard over the `data` mesh axis (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig, P, apply_rope, dense, qdense_def
+
+
+# ---------------------------------------------------------------------------
+# Param definitions
+# ---------------------------------------------------------------------------
+def gqa_def(cfg: ModelConfig) -> Dict[str, Any]:
+    d, h, kv, hd = cfg.d_model, cfg.n_q_heads, cfg.num_kv_heads, cfg.hd
+    return {
+        "wq": qdense_def(cfg, d, h * hd, (None, "heads"), bias=cfg.qkv_bias),
+        "wk": qdense_def(cfg, d, kv * hd, (None, "kv_heads"), bias=cfg.qkv_bias),
+        "wv": qdense_def(cfg, d, kv * hd, (None, "kv_heads"), bias=cfg.qkv_bias),
+        "wo": qdense_def(cfg, h * hd, d, ("heads", None)),
+    }
+
+
+def cross_attn_def(cfg: ModelConfig) -> Dict[str, Any]:
+    d = gqa_def(cfg)
+    d["gate"] = P((1,), (None,), init="zeros")  # gated cross-attn (llama-vision)
+    return d
+
+
+def mla_def(cfg: ModelConfig) -> Dict[str, Any]:
+    d, h = cfg.d_model, cfg.n_q_heads
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    return {
+        "wq": qdense_def(cfg, d, h * (nope + rope), (None, "heads")),
+        "wdkv": qdense_def(cfg, d, r + rope, (None, None)),
+        "wuk": qdense_def(cfg, r, h * nope, (None, "heads")),
+        "wuv": qdense_def(cfg, r, h * vd, (None, "heads")),
+        "wo": qdense_def(cfg, h * vd, d, ("heads", None)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (train / prefill)
+# ---------------------------------------------------------------------------
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Tq, H, hd)
+    k: jax.Array,  # (B, Tk, KV, hd)
+    v: jax.Array,  # (B, Tk, KV, hd_v)
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    chunk: int = 512,
+    scale: Optional[float] = None,
+    unroll: bool = False,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    b, tq, h, hd = q.shape
+    _, tk, kvh, hdv = v.shape
+    n_rep = h // kvh
+    scale = scale if scale is not None else hd ** -0.5
+    chunk = min(chunk, tk)
+    if tk % chunk:
+        pad = (-tk) % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_valid = tk
+        tk = tk + pad
+    else:
+        kv_valid = tk
+    n_chunks = tk // chunk
+
+    qf = (q.astype(acc_dtype) * scale).transpose(0, 2, 1, 3)  # (B,H,Tq,hd)
+    kc = k.reshape(b, n_chunks, chunk, kvh, hd)
+    vc = v.reshape(b, n_chunks, chunk, kvh, hdv)
+    q_pos = q_offset + jnp.arange(tq)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kb, vb, c_idx = inputs
+        kb = _repeat_kv(kb, n_rep).transpose(0, 2, 3, 1)  # (B,H,hd,chunk)
+        vb = _repeat_kv(vb, n_rep).transpose(0, 2, 1, 3)  # (B,H,chunk,hdv)
+        s = jnp.einsum(
+            "bhqd,bhdc->bhqc", qf, kb.astype(acc_dtype),
+            preferred_element_type=acc_dtype,
+        )  # (B,H,Tq,chunk)
+        kv_pos = c_idx * chunk + jnp.arange(chunk)
+        valid = kv_pos[None, :] < kv_valid
+        if causal:
+            valid = valid & (kv_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(valid[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqc,bhcd->bhqd", p, vb.astype(acc_dtype),
+            preferred_element_type=acc_dtype,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, tq), -1e30, acc_dtype)
+    l0 = jnp.zeros((b, h, tq), acc_dtype)
+    acc0 = jnp.zeros((b, h, tq, hdv), acc_dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        step,
+        (m0, l0, acc0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), jnp.arange(n_chunks)),
+        unroll=True if unroll else 1,
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,Tq,H,hdv)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention
+# ---------------------------------------------------------------------------
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    b, t, _ = x.shape
+    return x.reshape(b, t, n, -1)
+
+
+def gqa_attention(
+    params: Dict[str, Any],
+    x: jax.Array,  # (B, T, D)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,  # (T,)
+    causal: bool = True,
+    q_offset: int = 0,
+) -> jax.Array:
+    h, kv = cfg.n_q_heads, cfg.num_kv_heads
+    q = _split_heads(dense(params["wq"], x, cfg), h)
+    k = _split_heads(dense(params["wk"], x, cfg), kv)
+    v = _split_heads(dense(params["wv"], x, cfg), kv)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = cm.with_logical(q, ("batch", None, "heads", None))
+    k = cm.with_logical(k, ("batch", None, "kv_heads", None))
+    v = cm.with_logical(v, ("batch", None, "kv_heads", None))
+    out = chunked_attention(
+        q, k, v, causal=causal, q_offset=q_offset,
+        chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
+        acc_dtype=jnp.float32 if cfg.attn_f32 else jnp.bfloat16,
+    )
+    out = out.reshape(*x.shape[:2], -1)
+    return dense(params["wo"], out, cfg)
+
+
+def gqa_prefill(
+    params, x, cfg: ModelConfig, *, positions, max_seq: int
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Self-attention over the prompt + returns a padded KV cache."""
+    h, kv = cfg.n_q_heads, cfg.num_kv_heads
+    b, t, _ = x.shape
+    q = _split_heads(dense(params["wq"], x, cfg), h)
+    k = _split_heads(dense(params["wk"], x, cfg), kv)
+    v = _split_heads(dense(params["wv"], x, cfg), kv)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(
+        q, k, v, causal=True, chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
+        acc_dtype=jnp.float32 if cfg.attn_f32 else jnp.bfloat16,
+    )
+    out = dense(params["wo"], out.reshape(b, t, -1), cfg)
+    pad4 = ((0, 0), (0, max_seq - t), (0, 0), (0, 0))
+    pad3 = ((0, 0), (0, max_seq - t), (0, 0))
+    if cfg.kv_cache_int8:
+        qk, sk = _quantize_kv(k)
+        qv, sv = _quantize_kv(v)
+        cache = {
+            "k": jnp.pad(qk, pad4),
+            "v": jnp.pad(qv, pad4),
+            "k_scale": jnp.pad(sk, pad3),
+            "v_scale": jnp.pad(sv, pad3),
+        }
+    else:
+        cache = {"k": jnp.pad(k, pad4), "v": jnp.pad(v, pad4)}
+    return out, cache
+
+
+def _quantize_kv(x):
+    """Per-(token, kv-head) symmetric int8 quantization of K/V rows.
+
+    The paper's DPUs consume int8 operands; storing the KV cache at int8
+    (+ one f32 scale per token-head) halves serving's dominant HBM stream —
+    DESIGN.md §3 beyond-paper extension, exercised as §Perf HC-C."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def gqa_decode(
+    params,
+    x: jax.Array,  # (B, 1, D)
+    cache: Dict[str, jax.Array],
+    pos: jax.Array,  # scalar int32 — current length
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    h, kv = cfg.n_q_heads, cfg.num_kv_heads
+    b = x.shape[0]
+    q = _split_heads(dense(params["wq"], x, cfg), h)
+    k1 = _split_heads(dense(params["wk"], x, cfg), kv)
+    v1 = _split_heads(dense(params["wv"], x, cfg), kv)
+    posv = pos[None] if pos.ndim == 0 else pos
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k1 = apply_rope(k1, posv, cfg.rope_theta)
+    new_cache = {}
+    if cfg.kv_cache_int8:
+        qk1, sk1 = _quantize_kv(k1)
+        qv1, sv1 = _quantize_kv(v1)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], qk1, pos, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], qv1, pos, 1)
+        sk = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], sk1, pos, 1)
+        sv = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], sv1, pos, 1)
+        new_cache = {"k_scale": sk, "v_scale": sv}
+        kf = ck.astype(jnp.float32) * sk[..., None]
+        vf = cv.astype(jnp.float32) * sv[..., None]
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), pos, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), pos, 1)
+        kf = ck.astype(jnp.float32)
+        vf = cv.astype(jnp.float32)
+    ck = cm.with_logical(ck, ("batch", "kv_seq", "kv_heads", None))
+    cv = cm.with_logical(cv, ("batch", "kv_seq", "kv_heads", None))
+
+    s_max = ck.shape[1]
+    kf = _repeat_kv(kf, h // kv)
+    vf = _repeat_kv(vf, h // kv)
+    qf = q.astype(jnp.float32) * (cfg.hd ** -0.5)
+    s = jnp.einsum("bqhd,bshd->bhqs", qf, kf, preferred_element_type=jnp.float32)
+    kv_pos = jnp.arange(s_max)
+    s = jnp.where((kv_pos <= pos)[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, vf, preferred_element_type=jnp.float32)
+    out = dense(params["wo"], out.reshape(b, 1, -1).astype(x.dtype), cfg)
+    return out, {"k": ck, "v": cv, **new_cache}
+
+
+def gqa_cache_def(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Dict[str, Any]:
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    shape = (batch, max_seq, kv, hd)
+    axes = ("batch", "kv_seq", "kv_heads", None)
+    if cfg.kv_cache_int8:
+        sshape = (batch, max_seq, kv)
+        saxes = ("batch", "kv_seq", "kv_heads")
+        return {
+            "k": (shape, axes, jnp.int8),
+            "v": (shape, axes, jnp.int8),
+            "k_scale": (sshape, saxes, jnp.float32),
+            "v_scale": (sshape, saxes, jnp.float32),
+        }
+    return {
+        "k": (shape, axes, dtype),
+        "v": (shape, axes, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (vision / whisper decoder): static memory, no RoPE on kv
+# ---------------------------------------------------------------------------
+def cross_attention(
+    params,
+    x: jax.Array,       # (B, T, D)
+    memory_kv: Tuple[jax.Array, jax.Array],  # precomputed (B,S,KV,hd) pair
+    cfg: ModelConfig,
+    *,
+    gated: bool = False,
+) -> jax.Array:
+    h = cfg.n_q_heads
+    b, t, _ = x.shape
+    q = _split_heads(dense(params["wq"], x, cfg), h)
+    k, v = memory_kv
+    out = chunked_attention(
+        q, k, v, causal=False, chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
+        acc_dtype=jnp.float32 if cfg.attn_f32 else jnp.bfloat16,
+    )
+    out = dense(params["wo"], out.reshape(b, t, -1), cfg)
+    if gated:
+        out = jnp.tanh(params["gate"].astype(out.dtype)) * out
+    return out
+
+
+def cross_kv(params, memory: jax.Array, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder/vision states."""
+    kv = cfg.num_kv_heads
+    k = _split_heads(dense(params["wk"], memory, cfg), kv)
+    v = _split_heads(dense(params["wv"], memory, cfg), kv)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2)
+# ---------------------------------------------------------------------------
+def _mla_qkv(params, x, cfg: ModelConfig, positions):
+    h = cfg.n_q_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    b, t, _ = x.shape
+    q = dense(params["wq"], x, cfg).reshape(b, t, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = dense(params["wdkv"], x, cfg)  # (B,T,r+rope)
+    c_kv, k_rope = dkv[..., : cfg.kv_lora_rank], dkv[..., cfg.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,T,1,rope)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_expand_kv(params, c_kv, k_rope, cfg: ModelConfig):
+    h = cfg.n_q_heads
+    nope, vd = cfg.qk_nope_head_dim, cfg.v_head_dim
+    b, t, _ = c_kv.shape
+    k_nope = dense(params["wuk"], c_kv, cfg).reshape(b, t, h, nope)
+    v = dense(params["wuv"], c_kv, cfg).reshape(b, t, h, vd)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, t, h, k_rope.shape[-1]))], -1)
+    return k, v
+
+
+def mla_attention(
+    params, x, cfg: ModelConfig, *, positions, causal: bool = True
+) -> jax.Array:
+    b, t, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, cfg, positions)
+    k, v = _mla_expand_kv(params, c_kv, k_rope, cfg)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    out = chunked_attention(
+        q, k, v, causal=causal, scale=scale,
+        chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
+        acc_dtype=jnp.float32 if cfg.attn_f32 else jnp.bfloat16,
+    )
+    return dense(params["wo"], out.reshape(b, t, -1), cfg)
+
+
+def mla_prefill(params, x, cfg: ModelConfig, *, positions, max_seq: int):
+    b, t, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, cfg, positions)
+    k, v = _mla_expand_kv(params, c_kv, k_rope, cfg)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    out = chunked_attention(
+        q, k, v, causal=True, scale=scale,
+        chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
+        acc_dtype=jnp.float32 if cfg.attn_f32 else jnp.bfloat16,
+    )
+    out = dense(params["wo"], out.reshape(b, t, -1), cfg)
+    pad = max_seq - t
+    cache = {
+        "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+        "k_rope": jnp.pad(k_rope[:, :, 0, :], ((0, 0), (0, pad), (0, 0))),
+    }
+    return out, cache
+
+
+def mla_decode_absorbed(params, x, cache, pos, cfg: ModelConfig):
+    """MLA decode with the up-projections ABSORBED into the query/output
+    paths (DeepSeek-V2 serving trick): attention runs directly against the
+    compressed c_kv cache — no (B, S, H, head_dim) K/V expansion, cutting
+    per-step traffic by ~H*head_dim/kv_lora_rank (4x for these configs).
+    Exactly equals mla_decode (linear identity; tested)."""
+    b = x.shape[0]
+    h = cfg.n_q_heads
+    nope, rope, vd, r = (
+        cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    )
+    posv = pos[None] if pos.ndim == 0 else pos
+    q_nope, q_rope, c_kv1, k_rope1 = _mla_qkv(params, x, cfg, posv)
+    c = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv1.astype(cache["c_kv"].dtype), pos, 1
+    )
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope1[:, :, 0, :].astype(cache["k_rope"].dtype), pos, 1
+    )
+    c = cm.with_logical(c, ("batch", "kv_seq", None))
+    kr = cm.with_logical(kr, ("batch", "kv_seq", None))
+
+    w_uk = params["wuk"]["w"].astype(jnp.float32).reshape(r, h, nope)
+    w_uv = params["wuv"]["w"].astype(jnp.float32).reshape(r, h, vd)
+    # absorb W_uk into q:  q_abs[b,h,r] = sum_n q_nope[b,1,h,n] W_uk[r,h,n]
+    q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32), w_uk)
+    cf = c.astype(jnp.float32)
+    s_nope = jnp.einsum("bqhr,bsr->bhqs", q_abs, cf)
+    s_rope = jnp.einsum(
+        "bqhe,bse->bhqs", q_rope.astype(jnp.float32), kr.astype(jnp.float32)
+    )
+    scale = (nope + rope) ** -0.5
+    s = (s_nope + s_rope) * scale
+    s_max = c.shape[1]
+    s = jnp.where((jnp.arange(s_max) <= pos)[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", p, cf)          # attention over c_kv
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv)      # absorb W_uv
+    out = dense(params["wo"], out.reshape(b, 1, -1).astype(x.dtype), cfg)
+    return out, {"c_kv": c, "k_rope": kr}
+
+
+def mla_decode(params, x, cache, pos, cfg: ModelConfig):
+    """MLA decode against the *compressed* cache (c_kv + k_rope only)."""
+    if cfg.mla_absorb:
+        return mla_decode_absorbed(params, x, cache, pos, cfg)
+    b = x.shape[0]
+    posv = pos[None] if pos.ndim == 0 else pos
+    q_nope, q_rope, c_kv1, k_rope1 = _mla_qkv(params, x, cfg, posv)
+    c = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv1.astype(cache["c_kv"].dtype), pos, 1
+    )
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope1[:, :, 0, :].astype(cache["k_rope"].dtype), pos, 1
+    )
+    c = cm.with_logical(c, ("batch", "kv_seq", None))
+    kr = cm.with_logical(kr, ("batch", "kv_seq", None))
+    k, v = _mla_expand_kv(params, c, kr[:, :, None, :], cfg)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bqhd,bshd->bhqs", qf, k.astype(jnp.float32))
+    s_max = k.shape[1]
+    s = jnp.where((jnp.arange(s_max) <= pos)[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, v.astype(jnp.float32))
+    out = dense(params["wo"], out.reshape(b, 1, -1).astype(x.dtype), cfg)
+    return out, {"c_kv": c, "k_rope": kr}
+
+
+def mla_cache_def(cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    return {
+        "c_kv": ((batch, max_seq, cfg.kv_lora_rank), ("batch", "kv_seq", None), dtype),
+        "k_rope": ((batch, max_seq, cfg.qk_rope_head_dim), ("batch", "kv_seq", None), dtype),
+    }

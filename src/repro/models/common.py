@@ -1,0 +1,385 @@
+"""Shared model substrate: config, parameter system, core layers.
+
+Models are pure functions over pytrees.  Each module contributes a *param
+definition tree* (nested dicts of :class:`P`) carrying shape + logical
+sharding axes + init rule; ``init_tree`` materializes arrays and
+``axes_tree`` yields the matching logical-axis tree consumed by
+``repro.runtime.sharding``.  One source of truth — params and shardings can
+never drift apart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dpu import DPUConfig
+
+# ---------------------------------------------------------------------------
+# Model configuration — one dataclass covers all 10 assigned architectures
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str = "custom"
+    family: str = "dense"  # dense | vlm | moe | ssm | hybrid | audio
+
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 2
+    num_kv_heads: int = 2
+    d_ff: int = 256
+    vocab_size: int = 256
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    ffn_act: str = "swiglu"  # swiglu | gelu
+
+    # MoE ------------------------------------------------------------------
+    num_experts: int = 0           # routed experts (0 = dense FFN)
+    num_experts_per_tok: int = 2
+    num_shared_experts: int = 0
+    moe_d_ff: Optional[int] = None  # per-expert hidden (defaults to d_ff)
+    capacity_factor: float = 1.25
+
+    # MLA (deepseek-v2) ------------------------------------------------------
+    mla: bool = False
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    # Vision cross-attention (llama-3.2-vision) ------------------------------
+    cross_attn_every: int = 0      # 0 = no cross-attn layers
+    vision_seq: int = 1024         # stub patch-embedding sequence length
+
+    # SSM / hybrid -----------------------------------------------------------
+    ssm_state_size: int = 64
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+    attn_every: int = 0            # zamba2: shared attn block every k layers
+    slstm_every: int = 0           # xlstm: sLSTM block every k layers
+
+    # Encoder-decoder (whisper) ----------------------------------------------
+    encoder_decoder: bool = False
+    encoder_layers: int = 0
+    decoder_ratio: int = 4         # decoder_len = seq_len // ratio
+
+    # Numerics / execution ---------------------------------------------------
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    remat: bool = True
+    remat_policy: str = "full"   # full | dots (save dot outputs) — §Perf knob
+    attn_f32: bool = True        # f32 flash-attn accumulators (False: bf16 MXU)
+    attn_chunk: int = 512        # KV-block size of chunked attention
+    unroll_scans: bool = False   # unroll inner chunk scans (cost-analysis mode)
+    logical_rules: Any = None    # per-arch sharding-rule overrides (dict)
+    kv_cache_int8: bool = False  # int8 KV cache w/ per-token-head scales
+    mla_absorb: bool = False     # MLA decode with absorbed up-projections
+    seq_shard_residual: bool = True  # sequence-parallel residual stream
+    photonic: Optional[DPUConfig] = None
+    photonic_backend: str = "ref"    # ref | pallas | exact
+    photonic_scope: str = "weights"  # weights | none
+
+    # Structural padding applied for mesh divisibility (see pad_for_mesh) ----
+    padded_heads: Optional[int] = None
+    padded_vocab: Optional[int] = None
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+
+    @property
+    def n_q_heads(self) -> int:
+        return self.padded_heads if self.padded_heads is not None else self.num_heads
+
+    @property
+    def n_vocab(self) -> int:
+        return self.padded_vocab if self.padded_vocab is not None else self.vocab_size
+
+    @property
+    def moe_hidden(self) -> int:
+        return self.moe_d_ff if self.moe_d_ff is not None else self.d_ff
+
+    def pad_for_mesh(self, model_axis: int) -> "ModelConfig":
+        """Return a config with head/kv/vocab sizes divisible by the TP degree.
+
+        * q-heads padded up (zero-init extras — structural only),
+        * kv-heads replicated up to the TP degree when smaller,
+        * vocab padded up (masked out of the loss).
+        Overheads are counted in EXPERIMENTS.md §Roofline "useful ratio".
+        """
+        changes: Dict[str, Any] = {}
+        if self.num_heads % model_axis:
+            changes["padded_heads"] = _round_up(self.num_heads, model_axis)
+        kv = self.num_kv_heads
+        if kv and kv < model_axis:
+            if model_axis % kv:
+                raise ValueError(f"cannot replicate kv={kv} onto tp={model_axis}")
+            changes["num_kv_heads"] = model_axis
+        elif kv % model_axis:
+            changes["num_kv_heads"] = _round_up(kv, model_axis)
+        if self.vocab_size % model_axis:
+            changes["padded_vocab"] = _round_up(self.vocab_size, model_axis)
+        return dataclasses.replace(self, **changes) if changes else self
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Parameter definition system
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class P:
+    """A parameter definition: shape + logical axes + init rule."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "fan_in"  # fan_in | zeros | ones | embed | normal
+    fan_axis: int = 0      # which axis is fan-in for scaling
+    dtype: Optional[str] = None  # override model param_dtype ("int8", "float32")
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_tree(defs: Any, key: jax.Array, dtype: Any) -> Any:
+    """Materialize a nested dict of P into arrays (deterministic per-path)."""
+    leaves = []
+
+    def walk(node, path):
+        if isinstance(node, P):
+            leaves.append((path, node))
+        elif isinstance(node, dict):
+            for k in sorted(node):
+                walk(node[k], path + (k,))
+        else:
+            raise TypeError(f"bad param def at {path}: {type(node)}")
+
+    walk(defs, ())
+
+    out: Dict[str, Any] = {}
+    for path, p in leaves:
+        sub = key
+        for name in path:
+            sub = jax.random.fold_in(sub, _stable_hash(name))
+        dt = jnp.dtype(p.dtype) if p.dtype is not None else dtype
+        if dt == jnp.int8:
+            arr = jax.random.randint(sub, p.shape, -127, 128, jnp.int32).astype(jnp.int8)
+        elif p.init == "zeros":
+            arr = jnp.zeros(p.shape, dt)
+        elif p.init == "ones":
+            arr = jnp.ones(p.shape, dt)
+        elif p.init in ("embed", "normal"):
+            arr = (jax.random.normal(sub, p.shape) * 0.02).astype(dt)
+        else:  # fan_in variance scaling
+            fan = max(p.shape[p.fan_axis], 1)
+            arr = (jax.random.normal(sub, p.shape) / math.sqrt(fan)).astype(dt)
+        node = out
+        for name in path[:-1]:
+            node = node.setdefault(name, {})
+        node[path[-1]] = arr
+    return out
+
+
+def axes_tree(defs: Any) -> Any:
+    """The logical-axis tree matching init_tree's output."""
+    if isinstance(defs, P):
+        return defs.axes
+    return {k: axes_tree(v) for k, v in defs.items()}
+
+
+def _stable_hash(s: str) -> int:
+    h = 2166136261
+    for ch in s.encode():
+        h = (h ^ ch) * 16777619 & 0xFFFFFFFF
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Core layers (functional)
+# ---------------------------------------------------------------------------
+def dense_def(
+    d_in: int,
+    d_out: int,
+    axes: Tuple[Optional[str], Optional[str]],
+    bias: bool = False,
+    init: str = "fan_in",
+    quantized: bool = False,
+) -> Dict[str, P]:
+    if quantized:
+        # int8-stored weights + per-column dequant scale (photonic serving:
+        # the DPU weight banks hold B-bit slices of int8 weights — weights
+        # live in HBM at 1 byte, halving weight streaming traffic vs bf16).
+        d: Dict[str, P] = {
+            "w": P((d_in, d_out), axes, init=init, dtype="int8"),
+            "w_scale": P((d_out,), (axes[1],), init="ones", dtype="float32"),
+        }
+    else:
+        d = {"w": P((d_in, d_out), axes, init=init)}
+    if bias:
+        d["b"] = P((d_out,), (axes[1],), init="zeros")
+    return d
+
+
+def qdense_def(
+    cfg: ModelConfig,
+    d_in: int,
+    d_out: int,
+    axes: Tuple[Optional[str], Optional[str]],
+    bias: bool = False,
+    init: str = "fan_in",
+) -> Dict[str, P]:
+    """dense_def that stores int8 weights when the photonic int8 scope is on."""
+    quantized = cfg.photonic is not None and cfg.photonic_scope == "weights_int8"
+    return dense_def(d_in, d_out, axes, bias=bias, init=init, quantized=quantized)
+
+
+def dense(params: Dict[str, Any], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Linear layer; routes through the photonic DPU backend when enabled."""
+    w = params["w"]
+    if "w_scale" in params:
+        # int8-stored weights through the DPU integer datapath
+        from repro.core.dpu import DPUConfig, quantize_symmetric
+        from repro.kernels.photonic_gemm.ops import photonic_gemm_int
+
+        dpu = cfg.photonic or DPUConfig()
+        lead = x.shape[:-1]
+        xr = x.reshape(-1, x.shape[-1])
+        xq, sx = quantize_symmetric(xr, dpu.operand_bits)
+        out = photonic_gemm_int(xq, w, dpu, backend=cfg.photonic_backend)
+        scale = params["w_scale"].astype(jnp.float32)[None, :]
+        y = (out.astype(jnp.float32) * sx * scale).reshape(*lead, w.shape[1])
+        y = y.astype(x.dtype)
+    elif cfg.photonic is not None and cfg.photonic_scope == "weights":
+        from repro.kernels.photonic_gemm.ops import photonic_gemm
+
+        y = photonic_gemm(x, w, cfg.photonic, cfg.photonic_backend)
+    else:
+        y = x @ w.astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def quantize_params(params: Any, defs: Any) -> Any:
+    """Convert a float checkpoint to the int8-stored layout (per-column
+    symmetric quantization) for photonic serving."""
+    if isinstance(defs, dict) and "w_scale" in defs:
+        # w: (..., d_in, d_out) — per-(leading dims, column) symmetric scale,
+        # reducing the contraction axis only.
+        w = params["w"].astype(jnp.float32)
+        amax = jnp.max(jnp.abs(w), axis=-2)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(
+            jnp.round(w / jnp.expand_dims(scale, -2)), -127, 127
+        ).astype(jnp.int8)
+        out = dict(params)
+        out["w"] = q
+        out["w_scale"] = scale
+        return out
+    if isinstance(defs, dict):
+        return {
+            k: quantize_params(params[k], v) if isinstance(v, dict) else params[k]
+            for k, v in defs.items()
+        }
+    return params
+
+
+def rmsnorm_def(d: int) -> Dict[str, P]:
+    return {"scale": P((d,), (None,), init="ones")}
+
+
+def rmsnorm(params, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def embed_def(vocab: int, d: int) -> Dict[str, P]:
+    return {"table": P((vocab, d), ("vocab", None), init="embed")}
+
+
+def embed(params, ids: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return params["table"].astype(cfg.compute_dtype)[ids]
+
+
+def unembed(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Logits head (optionally tied to the embedding table)."""
+    w = params["table"] if "table" in params else params["w"]
+    if "table" in params:
+        return x @ w.astype(x.dtype).T
+    return x @ w.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def softmax_cross_entropy(
+    logits: jax.Array,  # (B, T, V_padded)
+    labels: jax.Array,  # (B, T) int32
+    true_vocab: int,
+) -> jax.Array:
+    """Mean CE in f32; padded vocab columns masked to -inf."""
+    v = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if v > true_vocab:
+        col = jax.lax.broadcasted_iota(jnp.int32, (v,), 0)
+        logits = jnp.where(col < true_vocab, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def apply_remat(fn, cfg: ModelConfig):
+    """jax.checkpoint with the configured policy (§Perf knob).
+
+    * "full": save nothing — recompute the whole block in backward.
+    * "dots": save dot/matmul outputs — no GEMM recompute (more memory,
+      ~25% fewer training FLOPs).
+    """
+    if not cfg.remat:
+        return fn
+    policy = None
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, prevent_cse=False, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# Sharding-constraint helper (no-op outside a mesh)
+# ---------------------------------------------------------------------------
+def with_logical(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+    from repro.runtime.sharding import logical_constraint
+
+    return logical_constraint(x, axes)

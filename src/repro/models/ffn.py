@@ -1,0 +1,110 @@
+"""Feed-forward layers: dense MLP (SwiGLU / GELU) and top-k MoE.
+
+The MoE uses capacity-based dense dispatch (Switch/MaxText style): one-hot
+dispatch/combine einsums so the whole layer is GEMMs + all-to-all-able
+reshards under GSPMD.  Experts are sharded over the `model` mesh axis
+(expert parallelism); shared experts (DeepSeek-V2) are a plain dense MLP.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig, P, dense, qdense_def
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+def mlp_def(cfg: ModelConfig, d_ff: int | None = None) -> Dict[str, Any]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.ffn_act == "swiglu":
+        return {
+            "wi": qdense_def(cfg, d, 2 * f, (None, "d_ff")),
+            "wo": qdense_def(cfg, f, d, ("d_ff", None)),
+        }
+    return {
+        "wi": qdense_def(cfg, d, f, (None, "d_ff")),
+        "wo": qdense_def(cfg, f, d, ("d_ff", None)),
+    }
+
+
+def mlp(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = dense(params["wi"], x, cfg)
+    if cfg.ffn_act == "swiglu":
+        u, g = jnp.split(h, 2, axis=-1)
+        h = u * jax.nn.silu(g)
+    else:
+        h = jax.nn.gelu(h)
+    return dense(params["wo"], h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+def moe_def(cfg: ModelConfig) -> Dict[str, Any]:
+    d, f, e = cfg.d_model, cfg.moe_hidden, cfg.num_experts
+    defs: Dict[str, Any] = {
+        "router": qdense_def(cfg, d, e, (None, None), init="normal"),
+        "wi": P((e, d, 2 * f), ("experts", None, None)),
+        "wo": P((e, f, d), ("experts", None, None), fan_axis=1),
+    }
+    if cfg.num_shared_experts:
+        defs["shared"] = mlp_def(cfg, cfg.num_shared_experts * f)
+    return defs
+
+
+def _capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = int(tokens * cfg.num_experts_per_tok * cfg.capacity_factor / cfg.num_experts)
+    return max(c, 1)
+
+
+def moe(params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux load-balancing loss)."""
+    b, t, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    cap = _capacity(cfg, t)
+
+    logits = dense(params["router"], x.astype(jnp.float32), cfg)  # (B,T,E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # Capacity-ranked dispatch, slot by slot (k is small and static).
+    dispatch = jnp.zeros((b, t, e, cap), x.dtype)
+    combine = jnp.zeros((b, t, e, cap), jnp.float32)
+    used = jnp.zeros((b, e), jnp.int32)  # tokens already placed per expert
+    for slot in range(k):
+        mask = jax.nn.one_hot(topi[..., slot], e, dtype=jnp.int32)  # (B,T,E)
+        pos = jnp.cumsum(mask, axis=1) - 1 + used[:, None, :]
+        ok = (pos < cap) & (mask > 0)
+        oh = jax.nn.one_hot(pos, cap, dtype=x.dtype) * ok[..., None]  # (B,T,E,C)
+        dispatch = dispatch + oh * mask[..., None]
+        combine = combine + oh.astype(jnp.float32) * (
+            mask[..., None] * topv[..., slot, None, None]
+        )
+        used = used + mask.sum(axis=1)
+
+    xin = jnp.einsum("btec,btd->becd", dispatch, x)  # (B,E,C,D)
+    xin = cm.with_logical(xin, ("batch", "experts", None, None))
+    h = jnp.einsum("becd,edf->becf", xin, params["wi"].astype(x.dtype))
+    u, g = jnp.split(h, 2, axis=-1)
+    h = u * jax.nn.silu(g)
+    out_e = jnp.einsum("becf,efd->becd", h, params["wo"].astype(x.dtype))
+    out_e = cm.with_logical(out_e, ("batch", "experts", None, None))
+    out = jnp.einsum("btec,becd->btd", combine.astype(x.dtype), out_e)
+
+    if cfg.num_shared_experts:
+        out = out + mlp(params["shared"], x, cfg)
+
+    # Load-balancing aux loss (Switch-style): E * sum_e f_e * p_e.
+    frac = jnp.mean(
+        jax.nn.one_hot(topi[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    prob = jnp.mean(gates, axis=(0, 1))
+    aux = e * jnp.sum(frac * prob)
+    return out, aux

@@ -1,0 +1,356 @@
+"""Decoder-only LM covering the dense / MoE / MLA / vision-cross-attn
+families (granite, qwen2 x2, deepseek-67b, phi3.5-moe, deepseek-v2-lite,
+llama-3.2-vision).
+
+Layers are stacked and scanned (`jax.lax.scan`) with optional remat — the
+HLO stays one-layer-sized, which is what makes 512-way SPMD dry-runs
+compile fast.  Heterogeneous stacks (vision cross-attn every Nth layer,
+DeepSeek's dense first layer) become separate scanned groups (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import ffn
+from repro.models.common import ModelConfig, P
+
+
+# ---------------------------------------------------------------------------
+# Param-def helpers
+# ---------------------------------------------------------------------------
+def stack_defs(defs: Any, n: int) -> Any:
+    """Prepend a layer dimension to every P in a def tree."""
+    if isinstance(defs, P):
+        return P((n,) + defs.shape, (None,) + defs.axes, defs.init, defs.fan_axis + 1)
+    return {k: stack_defs(v, n) for k, v in defs.items()}
+
+
+def block_def(cfg: ModelConfig, kind: str = "self") -> Dict[str, Any]:
+    d: Dict[str, Any] = {"ln1": cm.rmsnorm_def(cfg.d_model), "ln2": cm.rmsnorm_def(cfg.d_model)}
+    if kind in ("self", "dense_ffn"):
+        d["attn"] = attn.mla_def(cfg) if cfg.mla else attn.gqa_def(cfg)
+    elif kind == "cross":
+        d["attn"] = attn.cross_attn_def(cfg)
+        d["gate_ffn"] = P((1,), (None,), init="zeros")
+    if kind == "dense_ffn" or (cfg.num_experts == 0) or kind == "cross":
+        d["ffn"] = ffn.mlp_def(cfg)
+    else:
+        d["ffn"] = ffn.moe_def(cfg)
+    return d
+
+
+def _n_cross(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.cross_attn_every if cfg.cross_attn_every else 0
+
+
+def _n_self(cfg: ModelConfig) -> int:
+    n = cfg.num_layers - _n_cross(cfg)
+    if cfg.mla and cfg.num_experts:  # deepseek: first layer has dense FFN
+        n -= 1
+    return n
+
+
+def lm_def(cfg: ModelConfig) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {
+        "embed": cm.embed_def(cfg.n_vocab, cfg.d_model),
+        "layers": stack_defs(block_def(cfg, "self"), _n_self(cfg)),
+        "final_norm": cm.rmsnorm_def(cfg.d_model),
+    }
+    if cfg.mla and cfg.num_experts:
+        defs["first_block"] = block_def(cfg, "dense_ffn")
+    if cfg.cross_attn_every:
+        defs["cross"] = stack_defs(block_def(cfg, "cross"), _n_cross(cfg))
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = cm.qdense_def(cfg, cfg.d_model, cfg.n_vocab, (None, "vocab"))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Blocks (training / full-sequence forward)
+# ---------------------------------------------------------------------------
+def self_block(params, x, cfg: ModelConfig, positions) -> Tuple[jax.Array, jax.Array]:
+    h = cm.rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if cfg.mla:
+        a = attn.mla_attention(params["attn"], h, cfg, positions=positions)
+    else:
+        a = attn.gqa_attention(params["attn"], h, cfg, positions=positions)
+    x = x + a
+    x = cm.with_logical(x, ("batch", "seq_sp", None))
+    h = cm.rmsnorm(params["ln2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "router" in params["ffn"]:
+        f, aux = ffn.moe(params["ffn"], h, cfg)
+    else:
+        f = ffn.mlp(params["ffn"], h, cfg)
+    x = x + f
+    x = cm.with_logical(x, ("batch", "seq_sp", None))
+    return x, aux
+
+
+def cross_block(params, x, memory_kv, cfg: ModelConfig) -> jax.Array:
+    h = cm.rmsnorm(params["ln1"], x, cfg.norm_eps)
+    x = x + attn.cross_attention(params["attn"], h, memory_kv, cfg, gated=True)
+    h = cm.rmsnorm(params["ln2"], x, cfg.norm_eps)
+    x = x + jnp.tanh(params["gate_ffn"].astype(x.dtype)) * ffn.mlp(params["ffn"], h, cfg)
+    return cm.with_logical(x, ("batch", "seq_sp", None))
+
+
+def _scan_blocks(body, x, stacked, cfg: ModelConfig, *extra):
+    body = cm.apply_remat(body, cfg)
+
+    def step(carry, layer_params):
+        x, aux = carry
+        x, a = body(layer_params, x, *extra)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Training forward / loss
+# ---------------------------------------------------------------------------
+def lm_logits(params, tokens, cfg: ModelConfig, vision: Optional[jax.Array] = None):
+    b, t = tokens.shape
+    x = cm.embed(params["embed"], tokens, cfg)
+    x = cm.with_logical(x, ("batch", "seq_sp", None))
+    positions = jnp.arange(t)
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.mla and cfg.num_experts:
+        x, a = self_block(params["first_block"], x, cfg, positions)
+        aux += a
+
+    if cfg.cross_attn_every:
+        # groups of (cross_attn_every - 1) self layers + 1 cross layer
+        per = cfg.cross_attn_every - 1
+        n_groups = _n_cross(cfg)
+        self_stack = jax.tree.map(
+            lambda p: p.reshape((n_groups, per) + p.shape[1:]), params["layers"]
+        )
+        # Per-group cross params differ -> compute kv inside the group body.
+        def group(carry, inp):
+            x, aux = carry
+            selfs, crossp = inp
+            def body(p, x, pos):
+                return self_block(p, x, cfg, pos)
+            x, a = _scan_blocks(body, x, selfs, cfg, positions)
+            kv = attn.cross_kv(crossp["attn"], vision, cfg)
+            cb = cm.apply_remat(lambda p, x, k: cross_block(p, x, k, cfg), cfg)
+            x = cb(crossp, x, kv)
+            return (x, aux + a), None
+
+        (x, aux2), _ = jax.lax.scan(
+            group, (x, aux), (self_stack, params["cross"])
+        )
+        aux = aux2
+    else:
+        def body(p, x, pos):
+            return self_block(p, x, cfg, pos)
+
+        x, a = _scan_blocks(body, x, params["layers"], cfg, positions)
+        aux += a
+
+    x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = cm.unembed(params["embed"], x, cfg)
+    else:
+        logits = cm.dense(params["lm_head"], x, cfg)
+    return logits, aux
+
+
+def lm_loss(params, batch: Dict[str, jax.Array], cfg: ModelConfig) -> jax.Array:
+    logits, aux = lm_logits(
+        params, batch["tokens"], cfg, vision=batch.get("vision")
+    )
+    ce = cm.softmax_cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    return ce + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with per-layer caches
+# ---------------------------------------------------------------------------
+def _layer_prefill(p, x, cfg, positions, max_seq):
+    h = cm.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla:
+        a, cache = attn.mla_prefill(p["attn"], h, cfg, positions=positions, max_seq=max_seq)
+    else:
+        a, cache = attn.gqa_prefill(p["attn"], h, cfg, positions=positions, max_seq=max_seq)
+    x = x + a
+    h = cm.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if "router" in p["ffn"]:
+        f, _ = ffn.moe(p["ffn"], h, cfg)
+    else:
+        f = ffn.mlp(p["ffn"], h, cfg)
+    x = x + f
+    return cm.with_logical(x, ("batch", "seq_sp", None)), cache
+
+
+def _layer_decode(p, x, cache, pos, cfg):
+    h = cm.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla:
+        a, cache = attn.mla_decode(p["attn"], h, cache, pos, cfg)
+    else:
+        a, cache = attn.gqa_decode(p["attn"], h, cache, pos, cfg)
+    x = x + a
+    h = cm.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if "router" in p["ffn"]:
+        f, _ = ffn.moe(p["ffn"], h, cfg)
+    else:
+        f = ffn.mlp(p["ffn"], h, cfg)
+    return x + f, cache
+
+
+def lm_prefill(
+    params,
+    tokens: jax.Array,  # (B, T)
+    cfg: ModelConfig,
+    max_seq: int,
+    vision: Optional[jax.Array] = None,
+):
+    """Run the prompt; returns (last-token logits, cache)."""
+    b, t = tokens.shape
+    x = cm.embed(params["embed"], tokens, cfg)
+    positions = jnp.arange(t)
+    caches = {}
+
+    if cfg.mla and cfg.num_experts:
+        x, c0 = _layer_prefill(params["first_block"], x, cfg, positions, max_seq)
+        caches["first"] = c0
+
+    if cfg.cross_attn_every:
+        per = cfg.cross_attn_every - 1
+        n_groups = _n_cross(cfg)
+        self_stack = jax.tree.map(
+            lambda p: p.reshape((n_groups, per) + p.shape[1:]), params["layers"]
+        )
+
+        def group(x, inp):
+            selfs, crossp = inp
+
+            def body(x, p):
+                x, c = _layer_prefill(p, x, cfg, positions, max_seq)
+                return x, c
+
+            x, cs = jax.lax.scan(body, x, selfs)
+            kv = attn.cross_kv(crossp["attn"], vision, cfg)
+            x = cross_block(crossp, x, kv, cfg)
+            return x, (cs, kv)
+
+        x, (self_caches, cross_kvs) = jax.lax.scan(
+            group, x, (self_stack, params["cross"])
+        )
+        # (groups, per, ...) -> flat (layers, ...)
+        caches["layers"] = jax.tree.map(
+            lambda c: c.reshape((-1,) + c.shape[2:]), self_caches
+        )
+        caches["cross_kv"] = cross_kvs
+    else:
+        def body(x, p):
+            x, c = _layer_prefill(p, x, cfg, positions, max_seq)
+            return x, c
+
+        x, layer_caches = jax.lax.scan(body, x, params["layers"])
+        caches["layers"] = layer_caches
+
+    x = cm.rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+    logits = (
+        cm.unembed(params["embed"], x, cfg)
+        if cfg.tie_embeddings
+        else cm.dense(params["lm_head"], x, cfg)
+    )
+    caches["pos"] = jnp.array(t, jnp.int32)
+    return logits, caches
+
+
+def lm_decode(params, token: jax.Array, caches, cfg: ModelConfig):
+    """One decode step. token: (B, 1) int32. Returns (logits, caches)."""
+    pos = caches["pos"]
+    x = cm.embed(params["embed"], token, cfg)
+
+    if cfg.mla and cfg.num_experts:
+        x, c0 = _layer_decode(params["first_block"], x, caches["first"], pos, cfg)
+        caches = {**caches, "first": c0}
+
+    if cfg.cross_attn_every:
+        per = cfg.cross_attn_every - 1
+        n_groups = _n_cross(cfg)
+        self_stack = jax.tree.map(
+            lambda p: p.reshape((n_groups, per) + p.shape[1:]), params["layers"]
+        )
+        cache_stack = jax.tree.map(
+            lambda c: c.reshape((n_groups, per) + c.shape[1:]), caches["layers"]
+        )
+
+        def group(x, inp):
+            selfs, cs, crossp, kv = inp
+
+            def body(x, pc):
+                p, c = pc
+                x, c = _layer_decode(p, x, c, pos, cfg)
+                return x, c
+
+            x, cs = jax.lax.scan(body, x, (selfs, cs))
+            x = cross_block(crossp, x, kv, cfg)
+            return x, cs
+
+        x, new_caches = jax.lax.scan(
+            group, x, (self_stack, cache_stack, params["cross"], caches["cross_kv"])
+        )
+        caches = {
+            **caches,
+            "layers": jax.tree.map(
+                lambda c: c.reshape((-1,) + c.shape[2:]), new_caches
+            ),
+        }
+    else:
+        def body(x, pc):
+            p, c = pc
+            x, c = _layer_decode(p, x, c, pos, cfg)
+            return x, c
+
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches["layers"]))
+        caches = {**caches, "layers": new_caches}
+
+    x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (
+        cm.unembed(params["embed"], x, cfg)
+        if cfg.tie_embeddings
+        else cm.dense(params["lm_head"], x, cfg)
+    )
+    caches = {**caches, "pos": pos + 1}
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Cache shape/axes definitions (for dry-run input_specs)
+# ---------------------------------------------------------------------------
+def lm_cache_def(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Dict[str, Any]:
+    layer_cache = (
+        attn.mla_cache_def(cfg, batch, max_seq, dtype)
+        if cfg.mla
+        else attn.gqa_cache_def(cfg, batch, max_seq, dtype)
+    )
+    n_self = _n_self(cfg)
+    out: Dict[str, Any] = {
+        "layers": {
+            k: ((n_self,) + shape, (None,) + axes, dt)
+            for k, (shape, axes, dt) in layer_cache.items()
+        },
+        "pos": ((), (), jnp.int32),
+    }
+    if cfg.mla and cfg.num_experts:
+        out["first"] = layer_cache
+    if cfg.cross_attn_every:
+        n_cross = _n_cross(cfg)
+        kv_shape = (n_cross, batch, cfg.vision_seq, cfg.num_kv_heads, cfg.hd)
+        axes = (None, "batch", None, "kv_heads", None)
+        out["cross_kv"] = ((kv_shape, axes, dtype), (kv_shape, axes, dtype))
+    return out

@@ -1,0 +1,71 @@
+"""shard_map-pinned data-parallel train step.
+
+GSPMD occasionally picks pathological reshard points inside `lax.scan`
+bodies ("[SPMD] Involuntary full rematerialization" — observed on the
+xlstm/zamba2 train cells, EXPERIMENTS.md §Perf HC-B).  For replicated-param
+(DP) training the communication pattern is fully known: per-device gradients,
+ONE all-reduce, replicated update.  This module pins exactly that with
+`shard_map`, bypassing the partitioner's choices:
+
+* params + optimizer state replicated (P());
+* batch sharded over every mesh axis (pod x data x model ways of DP);
+* gradients all-reduced once — optionally int8-compressed
+  (`repro.optim.compress`, max-scale-consistent quantized psum), which
+  halves the wire bytes of the only collective in the step.
+
+Fits models whose replicated params+moments fit HBM (<= ~1.5B params bf16 +
+f32 moments per v5e chip) — exactly the small-dense/SSM regime where the
+GSPMD pathology bites.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.optim import adamw
+from repro.optim.compress import ring_int8_allreduce
+from repro.runtime import sharding as shd
+
+
+def make_dp_train_step(
+    loss_fn: Callable,            # (params, batch) -> scalar loss
+    opt_cfg: adamw.AdamWConfig,
+    mesh: jax.sharding.Mesh,
+    *,
+    compress_grads: bool = False,
+) -> Callable:
+    """Returns jit-able (params, opt_state, batch) -> (params, opt, loss, gnorm)."""
+    axes: Tuple[str, ...] = tuple(mesh.axis_names)
+    n_dev = 1
+    for a in axes:
+        n_dev *= mesh.shape[a]
+
+    batch_spec = P(axes)  # leading (batch) dim sharded over every axis
+
+    def step(params, opt_state, batch):
+        # constraints are GSPMD-only; inside shard_map all axes are manual
+        with shd.no_constraints():
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if compress_grads:
+            # int8-wire ring all-reduce: halves the only collective's bytes
+            grads = ring_int8_allreduce(grads, axes)
+            grads = jax.tree.map(lambda g: (g / n_dev).astype(g.dtype), grads)
+        else:
+            grads = jax.lax.pmean(grads, axes)
+        loss = jax.lax.pmean(loss, axes)
+        params, opt_state, metrics = adamw.update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, loss, metrics["grad_norm"]
+
+    return shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(P(), P(), batch_spec),
+        out_specs=(P(), P(), P(), P()),
+        check_vma=False,
+    )

@@ -1,0 +1,139 @@
+"""Batched serving engine: continuous batching over fixed decode slots.
+
+The engine keeps ``batch_size`` decode slots.  Requests queue up; free slots
+are filled by prefilling the prompt (one prefill per admission — left-padded
+into the shared KV cache), then all active slots advance together through
+``decode`` steps (one token per step for the whole batch).  Finished slots
+(EOS or max tokens) are immediately recycled — the vLLM-style continuous
+batching pattern, reduced to its JAX-functional core.
+
+For per-slot admission the cache must be *batch-indexable*: we prefill a
+single-row cache and scatter it into the batch cache at the slot index.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (T,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_size: int = 4
+    max_seq: int = 256
+    greedy: bool = True
+    temperature: float = 1.0
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, arch, model_cfg, params, cfg: ServeConfig):
+        self.arch = arch
+        self.model_cfg = model_cfg
+        self.params = params
+        self.cfg = cfg
+        self._decode = jax.jit(
+            lambda p, t, c: arch.decode(p, t, c, model_cfg)
+        )
+        self.slots: List[Optional[Request]] = [None] * cfg.batch_size
+        self.cache = None
+        self.tokens = jnp.zeros((cfg.batch_size, 1), jnp.int32)
+        self._rng = jax.random.PRNGKey(cfg.seed)
+        self.stats = {"prefills": 0, "decode_steps": 0, "completed": 0}
+        # Batch-axis index per cache leaf, from the cache_def's logical axes
+        # (guessing by size collides with e.g. n_layers == batch_size).
+        cache_def = arch.cache_def(
+            model_cfg, cfg.batch_size, cfg.max_seq,
+            {"enc_seq": cfg.max_seq}, model_cfg.compute_dtype,
+        )
+
+        def _axis(leaf):
+            _, axes, _ = leaf
+            return axes.index("batch") if "batch" in axes else None
+
+        self._batch_axis = jax.tree.map(
+            _axis, cache_def,
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+            and isinstance(x[0], tuple) and isinstance(x[1], tuple),
+        )
+
+    # -- admission -----------------------------------------------------------
+    def _admit(self, req: Request, slot: int):
+        """Prefill the prompt for one slot and merge into the batch cache."""
+        b = self.cfg.batch_size
+        prompt = jnp.asarray(req.prompt)[None, :]  # (1, T)
+        batch = {"tokens": jnp.tile(prompt, (b, 1))}
+        logits, cache = self.arch.prefill(
+            self.params, batch, self.model_cfg, self.cfg.max_seq
+        )
+        self.stats["prefills"] += 1
+        if self.cache is None:
+            self.cache = cache
+        else:
+            # scatter this request's row into the live cache at `slot`,
+            # along the true batch axis of each leaf
+            def merge(live, new, ax):
+                if ax is None or live.ndim == 0:
+                    return live  # batchless leaves (pos scalar) stay live
+                idx = [slice(None)] * live.ndim
+                idx[ax] = slice(slot, slot + 1)
+                return live.at[tuple(idx)].set(new[tuple(idx)])
+
+            self.cache = jax.tree.map(merge, self.cache, cache, self._batch_axis)
+        tok = jnp.argmax(logits[:, -1, : self.model_cfg.vocab_size], axis=-1)
+        self.tokens = self.tokens.at[slot, 0].set(tok[slot].astype(jnp.int32))
+        req.output.append(int(tok[slot]))
+        self.slots[slot] = req
+
+    # -- one engine iteration --------------------------------------------------
+    def step(self, queue: List[Request]):
+        # fill free slots
+        for slot in range(self.cfg.batch_size):
+            if self.slots[slot] is None and queue:
+                self._admit(queue.pop(0), slot)
+        if all(s is None for s in self.slots):
+            return
+        logits, self.cache = self._decode(self.params, self.tokens, self.cache)
+        self.stats["decode_steps"] += 1
+        logits = logits[:, -1, : self.model_cfg.vocab_size]
+        if self.cfg.greedy:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            self._rng, k = jax.random.split(self._rng)
+            nxt = jax.random.categorical(k, logits / self.cfg.temperature, axis=-1)
+        self.tokens = nxt[:, None].astype(jnp.int32)
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.output.append(tok)
+            if (
+                len(req.output) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id)
+            ):
+                req.done = True
+                self.stats["completed"] += 1
+                self.slots[slot] = None
+
+    def run(self, requests: List[Request], max_steps: int = 10_000) -> List[Request]:
+        queue = list(requests)
+        steps = 0
+        while (queue or any(s is not None for s in self.slots)) and steps < max_steps:
+            self.step(queue)
+            steps += 1
+        return requests

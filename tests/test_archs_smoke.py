@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Every assigned arch instantiates a REDUCED config of the same family and
+runs: init -> train loss (finite) -> gradients (finite) -> prefill + decode
+consistency against the teacher-forced full forward.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import lm, registry, whisper, xlstm, zamba2
+from repro.models.common import init_tree
+
+ARCHS = registry.names()
+B, T = 2, 16
+
+
+def _make_batch(arch, cfg, with_labels=True):
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+    batch = {"tokens": toks}
+    if with_labels:
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32
+        )
+    if arch.family == "vlm":
+        batch["vision"] = jnp.asarray(
+            rng.normal(size=(B, cfg.vision_seq, cfg.d_model)), jnp.float32
+        )
+    if arch.family == "audio":
+        batch["audio_embed"] = jnp.asarray(
+            rng.normal(size=(B, 2 * T, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+def _full_logits(arch, params, batch, cfg):
+    if arch.family in ("dense", "vlm", "moe"):
+        out, _ = lm.lm_logits(params, batch["tokens"], cfg, vision=batch.get("vision"))
+    elif arch.family == "ssm":
+        out, _ = xlstm.xlstm_logits(params, batch["tokens"], cfg)
+    elif arch.family == "hybrid":
+        out, _ = zamba2.zamba2_logits(params, batch["tokens"], cfg)
+    else:
+        out, _ = whisper.whisper_logits(params, batch, cfg)
+    return out
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step_shapes_and_finite(name):
+    arch = registry.get(name)
+    cfg = arch.smoke_config
+    params = init_tree(arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
+    batch = _make_batch(arch, cfg)
+    loss, grads = jax.value_and_grad(lambda p: arch.loss(p, batch, cfg))(params)
+    assert jnp.isfinite(loss), name
+    # loss ~ ln(vocab) at init
+    assert 0.5 * np.log(cfg.vocab_size) < float(loss) < 2.0 * np.log(cfg.vocab_size)
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert bool(jnp.all(jnp.isfinite(g))), (name, path)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_prefill_decode_matches_full_forward(name):
+    arch = registry.get(name)
+    cfg = dataclasses.replace(arch.smoke_config, remat=False)
+    if cfg.num_experts:
+        # Dropless capacity: capacity-based token dropping is T-dependent, so
+        # exact prefill/decode vs full-forward equivalence needs cf >= E/k.
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts))
+    params = init_tree(arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
+    batch = _make_batch(arch, cfg, with_labels=False)
+    full = _full_logits(arch, params, batch, cfg)
+
+    tp = T - 4
+    pb = dict(batch)
+    pb["tokens"] = batch["tokens"][:, :tp]
+    logits, cache = arch.prefill(params, pb, cfg, T)
+    assert logits.shape == (B, 1, cfg.n_vocab)
+    errs = [float(jnp.abs(logits[:, 0] - full[:, tp - 1]).max())]
+    for i in range(tp, T):
+        logits, cache = arch.decode(params, batch["tokens"][:, i : i + 1], cache, cfg)
+        errs.append(float(jnp.abs(logits[:, 0] - full[:, i]).max()))
+    assert max(errs) < 1e-3, (name, errs)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_full_configs_construct(name):
+    """FULL configs build param-def trees with the exact assigned sizes
+    (no allocation — shapes only)."""
+    arch = registry.get(name)
+    cfg = arch.config
+    defs = arch.param_defs(cfg)
+    n_params = 0
+
+    def walk(node):
+        nonlocal n_params
+        if isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+        else:
+            size = 1
+            for s in node.shape:
+                size *= s
+            n_params += size
+
+    walk(defs)
+    expected = {
+        "granite-3-8b": 8.1e9,
+        "qwen2-1.5b": 1.5e9,
+        "deepseek-67b": 67e9,
+        "qwen2-0.5b": 0.5e9,
+        "llama-3.2-vision-90b": 90e9,
+        "phi3.5-moe-42b-a6.6b": 42e9,
+        "deepseek-v2-lite-16b": 16e9,
+        "xlstm-350m": 0.35e9,
+        "zamba2-2.7b": 2.7e9,
+        "whisper-medium": 0.77e9,
+    }[name]
+    # within 2.2x of the nameplate (nameplates are approximate; xlstm uses
+    # projection factor 2 — DESIGN.md §7)
+    assert expected / 2.2 < n_params < expected * 2.2, (name, n_params, expected)
+
+
+def test_registry_complete():
+    assert len(ARCHS) == 10
+    fams = {registry.get(n).family for n in ARCHS}
+    assert fams == {"dense", "vlm", "moe", "ssm", "hybrid", "audio"}

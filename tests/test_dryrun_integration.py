@@ -1,0 +1,45 @@
+"""Integration test: one real dry-run cell in a subprocess (512 host
+devices, production mesh, lower+compile+analyses).  Uses the cheapest cell
+(qwen2-0.5b decode) to keep runtime bounded."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.parametrize("mesh", ["single"])
+def test_dryrun_cell_end_to_end(tmp_path, mesh):
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", "qwen2-0.5b", "--shape", "decode_32k", "--mesh", mesh,
+        "--variant", "pytest", "--force",
+    ]
+    r = subprocess.run(
+        cmd,
+        capture_output=True,
+        text=True,
+        timeout=900,
+        cwd=REPO,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src"), "XLA_FLAGS": ""},
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(
+        (REPO / "results" / "dryrun" / f"qwen2-0_5b__decode_32k__{mesh}__pytest.json").read_text()
+    )
+    assert out["ok"]
+    # compiled on 256 chips with analyses populated
+    assert out["compile_s"] > 0
+    assert out["hlo_flops_per_device"] > 0
+    assert out["flops_per_device_exact"] > out["hlo_flops_per_device"] * 0.5
+    assert out["argument_size_in_bytes"] > 0
+    # per-device argument bytes must fit v5e HBM
+    assert out["argument_size_in_bytes"] < 16e9
+    # q-head padding recorded (14 -> 16 for TP=16)
+    assert out["padded_heads"] == 16
+    assert "total_wire_bytes" in out

@@ -1,0 +1,141 @@
+"""Tests for the Eq.1-3 scalability solver against the paper's own numbers."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scalability as sc
+from repro.core import organizations as orgs
+from repro.core.params import PhotonicParams, watts_to_dbm
+
+
+class TestPaperValidation:
+    def test_table_v_reproduction(self):
+        """Our calibrated solver reproduces Table V (B=4) within +-10% per cell."""
+        ours = sc.table_v()
+        for key, n_paper in sc.TABLE_V_N.items():
+            n_ours = ours[key]
+            assert abs(n_ours - n_paper) / n_paper <= 0.10, (key, n_ours, n_paper)
+
+    def test_table_v_mean_error_small(self):
+        res = sc.calibration()
+        assert res.mean_abs_rel_err < 0.02
+
+    def test_table_v_exact_cells(self):
+        """At least 7 of 9 Table V cells match exactly."""
+        ours = sc.table_v()
+        exact = sum(ours[k] == v for k, v in sc.TABLE_V_N.items())
+        assert exact >= 7, ours
+
+    def test_fig5_ordering_smwa_best(self):
+        """Fig. 5: SMWA supports the largest N at every (B, DR)."""
+        tab = sc.scalability_table(sc.CALIBRATED)
+        for dr in (1, 5, 10):
+            for b in range(1, 9):
+                asmw = tab[("ASMW", dr, b)]
+                masw = tab[("MASW", dr, b)]
+                smwa = tab[("SMWA", dr, b)]
+                assert smwa >= masw >= asmw, (dr, b, asmw, masw, smwa)
+
+    def test_fsr_cap(self):
+        """N never exceeds the FSR-limited channel count (200)."""
+        assert sc.CALIBRATED.fsr_limited_n == 200
+        tab = sc.scalability_table(sc.CALIBRATED)
+        assert max(tab.values()) <= 200
+
+
+class TestEquations:
+    def test_enob_round_trip(self):
+        p = PhotonicParams()
+        for b in (1, 2, 4, 6, 8):
+            for dr in (1e9, 5e9, 10e9):
+                p_pd = sc.pd_sensitivity_watts(b, dr, p)
+                if math.isinf(p_pd):
+                    continue  # RIN-limited infeasible corner
+                assert sc.bits_supported(p_pd, dr, p) == pytest.approx(b, abs=1e-5)
+
+    def test_rin_ceiling_makes_high_b_dr_infeasible(self):
+        """High B at high DR is RIN-limited (empty Fig. 5 corners)."""
+        p = PhotonicParams()
+        assert math.isinf(sc.pd_sensitivity_watts(10, 10e9, p))
+        assert sc.max_dpu_size("SMWA", 10, 10, p) == 0
+
+    def test_sensitivity_monotone_in_bits_and_rate(self):
+        p = PhotonicParams()
+        s = [sc.pd_sensitivity_watts(b, 1e9, p) for b in range(1, 9)]
+        assert all(a < b for a, b in zip(s, s[1:]))
+        s = [sc.pd_sensitivity_watts(4, dr, p) for dr in (1e9, 5e9, 10e9)]
+        assert all(a < b for a, b in zip(s, s[1:]))
+
+    def test_output_power_decreasing_in_n(self):
+        p = sc.CALIBRATED
+        for org in orgs.ORGANIZATIONS:
+            vals = [sc.output_power_dbm(n, n, org, p) for n in range(2, 200)]
+            assert all(a > b for a, b in zip(vals, vals[1:]))
+
+    @given(
+        b=st.integers(min_value=1, max_value=10),
+        dr=st.floats(min_value=0.5, max_value=20.0),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_n_monotone_property(self, b, dr):
+        """Property: N never increases when B or DR increases."""
+        p = sc.CALIBRATED
+        for org in orgs.ORGANIZATIONS:
+            n0 = sc.max_dpu_size(org, b, dr, p)
+            n_b = sc.max_dpu_size(org, b + 1, dr, p)
+            n_dr = sc.max_dpu_size(org, b, dr * 1.5, p)
+            assert n_b <= n0
+            assert n_dr <= n0
+
+    @given(n=st.integers(min_value=2, max_value=200))
+    @settings(max_examples=50, deadline=None)
+    def test_org_power_ordering(self, n):
+        """SMWA always delivers more power to the PD than MASW than ASMW."""
+        p = sc.CALIBRATED
+        asmw = sc.output_power_dbm(n, n, "ASMW", p)
+        masw = sc.output_power_dbm(n, n, "MASW", p)
+        smwa = sc.output_power_dbm(n, n, "SMWA", p)
+        assert smwa > masw > asmw
+
+
+class TestOrganizations:
+    def test_block_orders(self):
+        for org, order in orgs.BLOCK_ORDERS.items():
+            assert set(order) == {"S", "A", "M", "W", "Sigma"}
+            assert order[-1] == "Sigma"  # summation always last
+            assert order.index("M") < order.index("W")  # M before W (paper §III-A)
+
+    def test_crosstalk_table_ii(self):
+        assert orgs.CROSSTALK["ASMW"].inter_modulation
+        assert not orgs.CROSSTALK["MASW"].inter_modulation
+        assert not orgs.CROSSTALK["SMWA"].inter_modulation
+        assert orgs.CROSSTALK["ASMW"].cross_weight
+        assert orgs.CROSSTALK["MASW"].cross_weight
+        assert not orgs.CROSSTALK["SMWA"].cross_weight
+        assert not orgs.CROSSTALK["ASMW"].filter_truncation
+        assert orgs.CROSSTALK["MASW"].filter_truncation
+        assert orgs.CROSSTALK["SMWA"].filter_truncation
+
+    def test_through_device_counts(self):
+        # Paper §IV-B1: 2(N-1), N, 2 for ASMW, MASW, SMWA at N.
+        assert orgs.through_device_count("ASMW", 10) == 18
+        assert orgs.through_device_count("MASW", 10) == 10
+        assert orgs.through_device_count("SMWA", 10) == 2
+
+    def test_penalty_ordering(self):
+        p = PhotonicParams()
+        assert p.penalty_db("SMWA") < p.penalty_db("MASW") < p.penalty_db("ASMW")
+
+    def test_structural_penalty_composition(self):
+        """Structural decomposition lands near Table IV's lumped penalties."""
+        p = sc.CALIBRATED
+        for org in orgs.ORGANIZATIONS:
+            total = sum(
+                v
+                for k, v in orgs.structural_penalty_db(org, 50, p).items()
+                if k != "through_delta"
+            )
+            lumped = p.penalty_db(org)
+            assert abs(total - lumped) < 2.0, (org, total, lumped)

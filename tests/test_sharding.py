@@ -1,0 +1,76 @@
+"""Unit tests for logical-axis sharding resolution (divisibility fallback,
+ZeRO-1 axes, rule overrides)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.runtime import sharding as shd
+
+
+def _mesh_1dev():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+class TestResolveSpec:
+    def test_basic_mapping(self):
+        mesh = _mesh_1dev()
+        spec = shd.resolve_spec((8, 16), ("batch", "heads"), mesh)
+        # 1-device mesh: everything divides; batch -> data (pod filtered out)
+        assert spec == P(("data",), "model")
+
+    def test_divisibility_fallback_replicates(self):
+        # fake a 4x2 mesh shape via a mesh over 1 device? Use abstract mesh.
+        mesh = jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+        with shd.use_rules(mesh):
+            spec = shd.resolve_spec((6, 7), ("batch", "heads"))
+            # 6 % 4 != 0 -> batch replicated; 7 % 2 != 0 -> heads replicated
+            assert spec == P()
+            assert len(shd.fallback_log()) == 2
+
+    def test_tuple_axis_prefix_fallback(self):
+        mesh = jax.sharding.AbstractMesh((2, 4, 2), ("pod", "data", "model"))
+        with shd.use_rules(mesh):
+            # batch=2 divides pod(2) but not pod*data(8) -> prefix ("pod",)
+            spec = shd.resolve_spec((2, 16), ("batch", None))
+            assert spec == P(("pod",))
+
+    def test_axis_used_once(self):
+        mesh = jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+        with shd.use_rules(mesh):
+            # batch -> data; kv_seq also wants data -> dropped (used)
+            spec = shd.resolve_spec((8, 8, 4), ("batch", "kv_seq", "kv_heads"))
+            assert spec == P(("data",), None, "model")
+
+    def test_rule_override(self):
+        mesh = jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+        with shd.use_rules(mesh, {"inner": None}):
+            spec = shd.resolve_spec((8, 8), (None, "inner"))
+            assert spec == P()
+
+
+class TestZero1:
+    def test_picks_divisible_dim(self):
+        import jax.numpy as jnp
+
+        axes = {"w": (None, None, "d_ff")}
+        shapes = {"w": jax.ShapeDtypeStruct((95, 8192, 1376), jnp.float32)}
+        out = shd.zero1_axes(axes, shapes, 32)
+        # dim0 (95) not divisible by 32; dim1 (8192) is
+        assert out["w"] == (None, "zero1", "d_ff")
+
+    def test_leaves_unshardable_alone(self):
+        import jax.numpy as jnp
+
+        axes = {"g": (None,)}
+        shapes = {"g": jax.ShapeDtypeStruct((3,), jnp.float32)}
+        assert shd.zero1_axes(axes, shapes, 32)["g"] == (None,)
+
+    def test_skips_already_sharded(self):
+        import jax.numpy as jnp
+
+        axes = {"w": ("vocab", "zero-nope")}  # nonsense name stays put
+        shapes = {"w": jax.ShapeDtypeStruct((64, 64), jnp.float32)}
+        out = shd.zero1_axes(axes, shapes, 32)
+        assert out["w"] == ("vocab", "zero-nope")

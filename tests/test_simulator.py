@@ -1,0 +1,153 @@
+"""Tests for the CNN workloads, perf model, event simulator, and the HLO
+collective parser."""
+
+import numpy as np
+import pytest
+
+from repro.core.cnn_workloads import WORKLOADS, total_macs
+from repro.core.perfmodel import AcceleratorConfig, area_matched_counts
+from repro.core.simulator import evaluate_all, simulate
+from repro.launch import hlo_analysis
+
+
+class TestWorkloads:
+    @pytest.mark.parametrize(
+        "name,macs_g",
+        [
+            ("googlenet", 1.58),
+            ("resnet50", 3.86),
+            ("mobilenet_v2", 0.30),
+            ("shufflenet_v2", 0.14),
+        ],
+    )
+    def test_mac_counts_match_literature(self, name, macs_g):
+        assert total_macs(name) / 1e9 == pytest.approx(macs_g, rel=0.15)
+
+    def test_layer_shapes_positive(self):
+        for name, fn in WORKLOADS.items():
+            for l in fn():
+                assert l.rows > 0 and l.k > 0 and l.cols > 0, (name, l)
+
+
+class TestPerfModel:
+    def test_from_paper_table_v(self):
+        cfg = AcceleratorConfig.from_paper("SMWA", 1)
+        assert (cfg.n, cfg.m, cfg.dpu_count) == (83, 83, 50)
+        cfg = AcceleratorConfig.from_paper("ASMW", 10)
+        assert (cfg.n, cfg.dpu_count) == (12, 291)
+
+    def test_ring_count_ordering(self):
+        # At equal N, M: MASW (shared input array) < ASMW < SMWA (hitless).
+        a = AcceleratorConfig(organization="ASMW", n=40, m=40)
+        m = AcceleratorConfig(organization="MASW", n=40, m=40)
+        s = AcceleratorConfig(organization="SMWA", n=40, m=40)
+        assert m.rings_per_dpu < a.rings_per_dpu < s.rings_per_dpu
+
+    def test_areas_positive_and_monotone_in_count(self):
+        import dataclasses
+
+        cfg = AcceleratorConfig.from_paper("SMWA", 5)
+        a1 = cfg.total_area_mm2()
+        a2 = dataclasses.replace(cfg, dpu_count=cfg.dpu_count * 2).total_area_mm2()
+        assert 0 < a1 < a2
+
+    def test_area_matched_counts_direction(self):
+        """Smaller-N orgs get MORE DPUs when area-matched (Table V trend)."""
+        counts = area_matched_counts(1)
+        assert counts["ASMW"] > counts["SMWA"]
+        assert counts["MASW"] > counts["SMWA"]
+
+
+class TestSimulator:
+    def test_fig7_ordering_and_trend(self):
+        res = evaluate_all()
+        models = ("googlenet", "resnet50", "mobilenet_v2", "shufflenet_v2")
+
+        def g(dr, other):
+            r = [res[("SMWA", dr, m)].fps / res[(other, dr, m)].fps for m in models]
+            return float(np.exp(np.mean(np.log(r))))
+
+        # SMWA wins FPS at every datarate (paper Fig. 7a)
+        for dr in (1, 5, 10):
+            assert g(dr, "ASMW") > 1.0
+            assert g(dr, "MASW") > 1.0
+        # MASW slightly better than ASMW (paper: "MASW performs slightly
+        # better than ASMW at all datarates")
+        for dr in (1, 5, 10):
+            for m in models:
+                assert res[("MASW", dr, m)].fps >= res[("ASMW", dr, m)].fps
+        # advantage grows with datarate (paper: 2.5x -> 3.9x -> 4.4x)
+        assert g(10, "ASMW") > g(5, "ASMW") > g(1, "ASMW")
+
+    def test_energy_and_time_positive(self):
+        r = simulate("resnet50", AcceleratorConfig.from_paper("SMWA", 5))
+        assert r.total_time_s > 0
+        assert r.dynamic_energy_j > 0
+        assert r.avg_power_w > r.static_power_w
+
+    def test_fps_decreases_with_datarate(self):
+        """Paper: 'as datarate increases the FPS of each accelerator
+        decreases' (N shrinks, more psums)."""
+        for org in ("ASMW", "MASW", "SMWA"):
+            f1 = simulate("resnet50", AcceleratorConfig.from_paper(org, 1)).fps
+            f10 = simulate("resnet50", AcceleratorConfig.from_paper(org, 10)).fps
+            assert f10 < f1, org
+
+
+SAMPLE_HLO = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%cond (arg: (s32[], f32[16,128])) -> pred[] {
+  %arg = (s32[], f32[16,128]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %k = s32[] constant(24)
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+
+%body (arg: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+  %arg = (s32[], f32[16,128]) parameter(0)
+  %x = f32[16,128] get-tuple-element(%arg), index=1
+  %ag = f32[16,2048] all-gather(%x), replica_groups=[32,16]<=[512], dimensions={1}
+  %ar = f32[16,128] all-reduce(%x), replica_groups=[32,16]<=[512], to_apply=%add
+  ROOT %t = (s32[], f32[16,128]) tuple(%i2, %ar)
+}
+
+ENTRY %main (p: f32[16,128]) -> f32[16,128] {
+  %p = f32[16,128] parameter(0)
+  %ar2 = f32[16,128] all-reduce(%p), replica_groups={{0,1},{2,3}}, to_apply=%add
+  %w = (s32[], f32[16,128]) while(%init), condition=%cond, body=%body
+  ROOT %o = f32[16,128] get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestHLOAnalysis:
+    def test_multipliers_from_while_trip_count(self):
+        mult = hlo_analysis.computation_multipliers(SAMPLE_HLO)
+        assert mult["body"] == 24.0
+        assert mult.get("main", 1.0) == 1.0
+
+    def test_collective_bytes_loop_adjusted(self):
+        s = hlo_analysis.collective_summary(SAMPLE_HLO)
+        # entry all-reduce: 16*128*4 bytes * 2(ring) * 1/2 ... group=2
+        ar_entry = 16 * 128 * 4 * 2 * (1 / 2)
+        # body all-reduce: same shape, group 16 -> *2*(15/16), x24 trips
+        ar_body = 16 * 128 * 4 * 2 * (15 / 16) * 24
+        assert s["bytes_all-reduce"] == pytest.approx(ar_entry + ar_body, rel=1e-6)
+        # body all-gather: out 16*2048*4 * (15/16) x24
+        assert s["bytes_all-gather"] == pytest.approx(
+            16 * 2048 * 4 * (15 / 16) * 24, rel=1e-6
+        )
+        assert s["count_all-reduce"] == 2
+        assert s["count_all-gather"] == 1
+
+    def test_group_size_parsing(self):
+        assert hlo_analysis._group_size("replica_groups=[32,16]<=[512]") == 16
+        assert hlo_analysis._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+        assert hlo_analysis._group_size("no groups here") is None
