@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _kernel(
     x_ref,
@@ -138,7 +140,7 @@ def photonic_gemm_pallas(
         ],
         out_specs=pl.BlockSpec((tile_r, tile_c), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -53,6 +53,7 @@ def run_cell(
     import jax
     import jax.numpy as jnp
 
+    from repro import compat
     from repro.core.dpu import DPUConfig
     from repro.launch import hlo_analysis
     from repro.launch.mesh import make_production_mesh, require_devices
@@ -95,7 +96,7 @@ def run_cell(
         "padded_vocab": cfg.padded_vocab,
         "num_kv_heads_effective": cfg.num_kv_heads,
         "param_count": sum(
-            int(jnp.prod(jnp.array(l.shape))) for l in jax.tree.leaves(param_sds)
+            int(jnp.prod(jnp.array(l.shape))) for l in compat.tree_leaves(param_sds)
         ),
     }
 
@@ -109,7 +110,7 @@ def run_cell(
         )
         p_sh = shd.tree_shardings(mesh, bsds, baxes)
         if shape.kind == "train" and dp_shardmap:
-            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.compat import NamedSharding, PartitionSpec
             from repro.runtime.dp_step import make_dp_train_step
 
             opt_cfg = adamw.AdamWConfig()
@@ -124,9 +125,9 @@ def run_cell(
             jitted = jax.jit(
                 step,
                 in_shardings=(
-                    jax.tree.map(lambda _: repl, bsds),
-                    jax.tree.map(lambda _: repl, opt_sds),
-                    jax.tree.map(lambda _: bsh, batch_sds),
+                    compat.tree_map(lambda _: repl, bsds),
+                    compat.tree_map(lambda _: repl, opt_sds),
+                    compat.tree_map(lambda _: bsh, batch_sds),
                 ),
                 donate_argnums=(0, 1),
             )
@@ -217,7 +218,7 @@ def run_cell(
         ):
             out[field] = getattr(ma, field, None)
 
-        ca = compiled.cost_analysis() or {}
+        ca = compat.cost_analysis(compiled)
         out["hlo_flops_per_device"] = ca.get("flops")
         out["hlo_bytes_per_device"] = ca.get("bytes accessed")
 
@@ -236,7 +237,7 @@ def run_cell(
             with shd.use_rules(mesh, lcfg.logical_rules):
                 lj, largs = build(lcfg)
                 lcomp = lj.lower(*largs).compile()
-            lca = lcomp.cost_analysis() or {}
+            lca = compat.cost_analysis(lcomp)
             dot_b = hlo_analysis.matmul_traffic_bytes(lcomp.as_text())
             ladder_steps[step_name] = {
                 "coeff": coeff,

@@ -6,26 +6,35 @@ importing this module never touches jax device state.  The single-pod mesh is
 leading "pod" axis (2 pods = 512 chips).  The `pod` axis carries outer data
 parallelism (gradient all-reduce crosses the inter-pod DCN once per step);
 `model` is tensor/expert parallel and stays ICI-local.
+
+Mesh construction goes through ``repro.compat`` (never raw jax) so it works
+on JAX 0.4.x through 0.6.x regardless of axis-type API availability.
 """
 
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
+
+from repro import compat
+
+
+def build_mesh(shape: Sequence[int], axes: Sequence[str]) -> compat.Mesh:
+    """Device mesh over the first prod(shape) devices, all axes auto-typed
+    (GSPMD decides placement — the 0.4.x behavior on every JAX version)."""
+    return compat.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return build_mesh(shape, axes)
 
 
 def make_smoke_mesh():
     """1-device mesh with the production axis names (for CPU smoke tests)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    return build_mesh((1, 1), ("data", "model"))
 
 
 def require_devices(n: int) -> None:

@@ -19,6 +19,8 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def _quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
     if g.size == 0:  # zero-layer ladder variants produce (0, ...) leaves
@@ -43,7 +45,7 @@ def compressed_psum(tree: Any, axis_name: str) -> Any:
         total = jax.lax.psum(q2.astype(jnp.int32), axis_name)
         return (total.astype(jnp.float32) * scale_max).astype(g.dtype)
 
-    return jax.tree.map(leaf, tree)
+    return compat.tree_map(leaf, tree)
 
 
 def ring_int8_allreduce(tree: Any, axis_name) -> Any:
@@ -56,7 +58,7 @@ def ring_int8_allreduce(tree: Any, axis_name) -> Any:
     Requantization error per hop is bounded by the per-chunk scale; for
     gradient averaging this is the standard int8-ring trade (error feedback
     available via with_error_feedback)."""
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     if n == 1:
         return tree
     idx = jax.lax.axis_index(axis_name)
@@ -105,7 +107,7 @@ def ring_int8_allreduce(tree: Any, axis_name) -> Any:
             out = out[: g.size]
         return out.reshape(shape).astype(g.dtype)
 
-    return jax.tree.map(leaf, tree)
+    return compat.tree_map(leaf, tree)
 
 
 def quantize_dequantize(tree: Any) -> Tuple[Any, Any]:
@@ -116,13 +118,13 @@ def quantize_dequantize(tree: Any) -> Tuple[Any, Any]:
         deq = (q.astype(jnp.float32) * scale).astype(g.dtype)
         return deq, (g - deq)
 
-    pairs = jax.tree.map(leaf, tree)
-    comp = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
-    resid = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    pairs = compat.tree_map(leaf, tree)
+    comp = compat.tree_map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    resid = compat.tree_map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
     return comp, resid
 
 
 def with_error_feedback(grads: Any, residual: Any) -> Tuple[Any, Any]:
     """Add carried residual, compress, return (compressed, new residual)."""
-    fed = jax.tree.map(lambda g, r: g + r.astype(g.dtype), grads, residual)
+    fed = compat.tree_map(lambda g, r: g + r.astype(g.dtype), grads, residual)
     return quantize_dequantize(fed)

@@ -25,9 +25,9 @@ from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
-from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.compat import PartitionSpec as P
 from repro.optim import adamw
 from repro.optim.compress import ring_int8_allreduce
 from repro.runtime import sharding as shd
@@ -55,14 +55,14 @@ def make_dp_train_step(
         if compress_grads:
             # int8-wire ring all-reduce: halves the only collective's bytes
             grads = ring_int8_allreduce(grads, axes)
-            grads = jax.tree.map(lambda g: (g / n_dev).astype(g.dtype), grads)
+            grads = compat.tree_map(lambda g: (g / n_dev).astype(g.dtype), grads)
         else:
             grads = jax.lax.pmean(grads, axes)
         loss = jax.lax.pmean(loss, axes)
         params, opt_state, metrics = adamw.update(opt_cfg, params, grads, opt_state)
         return params, opt_state, loss, metrics["grad_norm"]
 
-    return shard_map(
+    return compat.shard_map(
         step,
         mesh=mesh,
         in_specs=(P(), P(), batch_spec),

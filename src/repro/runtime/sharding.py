@@ -17,7 +17,9 @@ from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro import compat
+from repro.compat import Mesh, NamedSharding, PartitionSpec
 
 AxisName = Union[str, Tuple[str, ...]]
 
@@ -49,7 +51,7 @@ def zero1_axes(param_axes: Any, param_shapes: Any, divisor: int) -> Any:
             isinstance(e, (str, type(None))) for e in x
         )
 
-    flat_shapes, treedef = jax.tree.flatten(param_shapes)
+    flat_shapes, treedef = compat.tree_flatten(param_shapes)
     flat_axes = treedef.flatten_up_to(param_axes)
 
     out = []
@@ -206,6 +208,6 @@ def tree_shardings(
     def leaf(s, a):
         return named_sharding(mesh, s.shape, a, rules)
 
-    # tree.map flattens up to `shapes`' leaves, so the tuple-of-names leaves
+    # tree_map flattens up to `shapes`' leaves, so the tuple-of-names leaves
     # of `axes` pass through intact.
-    return jax.tree.map(leaf, shapes, axes)
+    return compat.tree_map(leaf, shapes, axes)

@@ -1,0 +1,99 @@
+"""Hypothesis import shim for property-based tests.
+
+``hypothesis`` is a dev-only dependency (see pyproject.toml ``[dev]`` extra).
+When it is installed, this module re-exports the real ``given`` / ``settings``
+/ ``strategies``.  When it is absent (minimal CI images, the bare runtime
+install), a small deterministic fallback runs each property test against a
+fixed, seeded sample of the strategy space instead of erroring at collection
+time — weaker shrinking/coverage than real hypothesis, but the invariants
+still get exercised.
+
+Only the strategy surface this repo uses is implemented: ``st.integers``,
+``st.floats``, ``st.sampled_from``.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+    import zlib
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng: random.Random):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            lo = -(2**63) if min_value is None else int(min_value)
+            hi = 2**63 - 1 if max_value is None else int(max_value)
+            return _Strategy(lambda rng: rng.randint(lo, hi))
+
+        @staticmethod
+        def floats(min_value=None, max_value=None, **_kwargs):
+            # Unbounded floats default to [0, 1] — far narrower than real
+            # hypothesis. Every in-repo usage passes explicit bounds.
+            lo = 0.0 if min_value is None else float(min_value)
+            hi = 1.0 if max_value is None else float(max_value)
+            return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+    strategies = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategy_kwargs):
+        def deco(fn):
+            # Seeded by the test name so runs are reproducible across
+            # processes (hash() is salted; crc32 is not).
+            base_seed = zlib.crc32(fn.__qualname__.encode())
+
+            def runner(*args):
+                # Read at call time so @settings works above OR below @given
+                # (both orders are legal with real hypothesis).
+                max_examples = getattr(
+                    runner,
+                    "_compat_max_examples",
+                    getattr(fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES),
+                )
+                for i in range(max_examples):
+                    rng = random.Random(base_seed * 1_000_003 + i)
+                    drawn = {
+                        name: strat.sample(rng)
+                        for name, strat in strategy_kwargs.items()
+                    }
+                    try:
+                        fn(*args, **drawn)
+                    except Exception as e:  # surface the failing example
+                        raise AssertionError(
+                            f"{fn.__qualname__} failed on example {i}: {drawn!r}"
+                        ) from e
+
+            # A plain zero/varargs signature, so pytest does not mistake the
+            # strategy kwargs for fixtures. Deliberately no __wrapped__.
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = fn.__qualname__
+            runner.__doc__ = fn.__doc__
+            return runner
+
+        return deco

@@ -20,15 +20,20 @@ def test_dryrun_cell_end_to_end(tmp_path, mesh):
         "--arch", "qwen2-0.5b", "--shape", "decode_32k", "--mesh", mesh,
         "--variant", "pytest", "--force",
     ]
+    pythonpath = str(REPO / "src")
+    if os.environ.get("PYTHONPATH"):
+        pythonpath += os.pathsep + os.environ["PYTHONPATH"]
     r = subprocess.run(
         cmd,
         capture_output=True,
         text=True,
         timeout=900,
         cwd=REPO,
-        env={**os.environ, "PYTHONPATH": str(REPO / "src"), "XLA_FLAGS": ""},
+        env={**os.environ, "PYTHONPATH": pythonpath, "XLA_FLAGS": ""},
     )
-    assert r.returncode == 0, r.stderr[-3000:]
+    # Surface both streams: the cell writes its traceback to stdout (JSON)
+    # and import-time crashes (e.g. mesh construction) to stderr.
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}\nstdout:\n{r.stdout[-2000:]}"
     out = json.loads(
         (REPO / "results" / "dryrun" / f"qwen2-0_5b__decode_32k__{mesh}__pytest.json").read_text()
     )

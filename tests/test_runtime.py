@@ -178,8 +178,7 @@ class TestCompression:
     def test_compressed_psum_axis1_identity_error_bound(self):
         """On a singleton axis, compressed_psum == quantize-dequantize; the
         error is bounded by scale/2 elementwise."""
-        from jax import shard_map
-        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.compat import Mesh, PartitionSpec as P, shard_map
 
         mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))
         g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(16, 16)), jnp.float32)}
@@ -211,7 +210,7 @@ class TestDPShardMap:
     def test_dp_step_matches_plain_step(self):
         """shard_map-pinned DP step == plain jit step on a 1x1 mesh."""
         import numpy as np
-        from jax.sharding import Mesh
+        from repro.compat import Mesh
         from repro.runtime.dp_step import make_dp_train_step
         from repro.runtime.train_loop import build_train_step
 
@@ -237,8 +236,7 @@ class TestDPShardMap:
 
     def test_ring_int8_allreduce_singleton(self):
         from repro.optim.compress import ring_int8_allreduce
-        from jax import shard_map
-        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.compat import Mesh, PartitionSpec as P, shard_map
         import numpy as np
 
         mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))

@@ -4,8 +4,7 @@ ZeRO-1 axes, rule overrides)."""
 import jax
 import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
-
+from repro.compat import Mesh, PartitionSpec as P, abstract_mesh
 from repro.runtime import sharding as shd
 
 
@@ -21,8 +20,8 @@ class TestResolveSpec:
         assert spec == P(("data",), "model")
 
     def test_divisibility_fallback_replicates(self):
-        # fake a 4x2 mesh shape via a mesh over 1 device? Use abstract mesh.
-        mesh = jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+        # fake a 4x2 mesh shape without devices: use an abstract mesh.
+        mesh = abstract_mesh((4, 2), ("data", "model"))
         with shd.use_rules(mesh):
             spec = shd.resolve_spec((6, 7), ("batch", "heads"))
             # 6 % 4 != 0 -> batch replicated; 7 % 2 != 0 -> heads replicated
@@ -30,21 +29,21 @@ class TestResolveSpec:
             assert len(shd.fallback_log()) == 2
 
     def test_tuple_axis_prefix_fallback(self):
-        mesh = jax.sharding.AbstractMesh((2, 4, 2), ("pod", "data", "model"))
+        mesh = abstract_mesh((2, 4, 2), ("pod", "data", "model"))
         with shd.use_rules(mesh):
             # batch=2 divides pod(2) but not pod*data(8) -> prefix ("pod",)
             spec = shd.resolve_spec((2, 16), ("batch", None))
             assert spec == P(("pod",))
 
     def test_axis_used_once(self):
-        mesh = jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+        mesh = abstract_mesh((4, 2), ("data", "model"))
         with shd.use_rules(mesh):
             # batch -> data; kv_seq also wants data -> dropped (used)
             spec = shd.resolve_spec((8, 8, 4), ("batch", "kv_seq", "kv_heads"))
             assert spec == P(("data",), None, "model")
 
     def test_rule_override(self):
-        mesh = jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+        mesh = abstract_mesh((4, 2), ("data", "model"))
         with shd.use_rules(mesh, {"inner": None}):
             spec = shd.resolve_spec((8, 8), (None, "inner"))
             assert spec == P()
