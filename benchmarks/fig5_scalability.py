@@ -6,11 +6,11 @@ import time
 from repro.core import scalability as sc
 
 
-def run(csv=True):
+def run(csv=True, drs=(1, 5, 10), bits=tuple(range(1, 9))):
     rows = []
     t0 = time.time()
-    for dr in (1, 5, 10):
-        for b in range(1, 9):
+    for dr in drs:
+        for b in bits:
             n = {
                 org: sc.calibrated_max_n(org, b, dr)
                 for org in ("ASMW", "MASW", "SMWA")
@@ -26,11 +26,19 @@ def run(csv=True):
     return rows
 
 
-def main():
-    rows = run()
+def main(smoke=False):
+    rows = run(drs=(5,), bits=(2, 4, 8)) if smoke else run()
     # validation hooks (also asserted in tests)
     for dr, b, a, m, s in rows:
         assert s >= m >= a, (dr, b, a, m, s)
+    return {
+        "cells": len(rows),
+        "n_at_b4": {
+            f"dr{dr}": {"ASMW": a, "MASW": m, "SMWA": s}
+            for dr, b, a, m, s in rows
+            if b == 4
+        },
+    }
 
 
 if __name__ == "__main__":

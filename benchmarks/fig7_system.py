@@ -23,30 +23,30 @@ def gmean(xs):
     return float(np.exp(np.mean(np.log(xs))))
 
 
-def run():
+def run(models=MODELS, drs=DRS):
     t0 = time.time()
-    res = evaluate_all(models=MODELS)
+    res = evaluate_all(models=models, datarates=drs)
     sim_us = (time.time() - t0) * 1e6 / len(res)
 
-    base = res[("ASMW", 10, "resnet50")]
-    matched_area = {dr: AcceleratorConfig.from_paper("SMWA", dr).total_area_mm2() for dr in DRS}
+    base = res[("ASMW", max(drs), models[0] if "resnet50" not in models else "resnet50")]
+    matched_area = {dr: AcceleratorConfig.from_paper("SMWA", dr).total_area_mm2() for dr in drs}
 
     print("fig7_system,normalized_to_ASMW_resnet50_10GS")
     print("org,dr_gs,model,norm_fps,norm_fps_per_w,norm_fps_per_w_per_mm2")
     for (org, dr, m), r in sorted(res.items()):
         nf = r.fps / base.fps
         nw = r.fps_per_w / base.fps_per_w
-        na = (r.fps_per_w / matched_area[dr]) / (base.fps_per_w / matched_area[10])
+        na = (r.fps_per_w / matched_area[dr]) / (base.fps_per_w / matched_area[max(drs)])
         print(f"{org},{dr},{m},{nf:.3f},{nw:.3f},{na:.3f}")
 
     print("ratios,SMWA_vs_other (gmean over CNNs | max)")
     summary = {}
-    for dr in DRS:
+    for dr in drs:
         for other in ("ASMW", "MASW"):
-            rf = [res[("SMWA", dr, m)].fps / res[(other, dr, m)].fps for m in MODELS]
+            rf = [res[("SMWA", dr, m)].fps / res[(other, dr, m)].fps for m in models]
             rw = [
                 res[("SMWA", dr, m)].fps_per_w / res[(other, dr, m)].fps_per_w
-                for m in MODELS
+                for m in models
             ]
             summary[(dr, other)] = (gmean(rf), max(rf), gmean(rw), max(rw))
             print(
@@ -57,13 +57,25 @@ def run():
     return summary
 
 
-def main():
-    summary = run()
+def main(smoke=False):
+    if smoke:
+        summary = run(models=("shufflenet_v2", "resnet50"), drs=(1, 10))
+    else:
+        summary = run()
     # Paper-claim direction checks (magnitude comparison in EXPERIMENTS.md):
     for (dr, other), (fg, fm, wg, wm) in summary.items():
         assert fg > 1.0, f"SMWA must beat {other} on FPS at {dr} GS/s"
     # ratio grows with datarate (paper: 2.5x -> 3.9x -> 4.4x vs ASMW)
     assert summary[(10, "ASMW")][0] > summary[(1, "ASMW")][0]
+    return {
+        f"SMWA_vs_{other}_dr{dr}": {
+            "fps_gmean": round(fg, 3),
+            "fps_max": round(fm, 3),
+            "fps_per_w_gmean": round(wg, 3),
+            "fps_per_w_max": round(wm, 3),
+        }
+        for (dr, other), (fg, fm, wg, wm) in sorted(summary.items())
+    }
 
 
 if __name__ == "__main__":

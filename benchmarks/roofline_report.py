@@ -208,7 +208,8 @@ def render(write_experiments: bool = False) -> str:
     return table
 
 
-def main():
+def main(smoke=False):
+    del smoke  # pure post-processing of cached dry-run JSON
     print("roofline_report,per_cell_terms")
     print(render())
     # summary stats for §Perf selection
@@ -231,6 +232,10 @@ def main():
         print(f"# worst_mfu_ub={worst}")
     if most_coll:
         print(f"# most_collective_bound={most_coll}")
+    return {
+        "worst_mfu_upper_bound": list(worst) if worst else None,
+        "most_collective_bound": list(most_coll) if most_coll else None,
+    }
 
 
 if __name__ == "__main__":

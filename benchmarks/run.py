@@ -1,21 +1,45 @@
 """Benchmark harness — one entry per paper table/figure (deliverable d),
-plus the dry-run roofline report.  Prints ``name,us_per_call,derived`` CSV
-blocks per benchmark.
+plus the dry-run roofline report and the organization-accuracy sweep.
+
+Prints ``name,us_per_call,derived`` CSV blocks per benchmark and writes a
+machine-readable ``results/BENCH_photonic.json`` (per-bench wall time +
+derived metrics) so the perf/accuracy trajectory is tracked across PRs.
+
+``--smoke`` shrinks every sweep to a CI-sized subset (used by the CI
+benchmark-smoke step to catch bit-rot without the full runtime).
 """
 
+import argparse
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "results"
 
 
-def main() -> None:
-    from benchmarks import fig5_scalability, fig7_system, noise_accuracy, table5_dpu
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--smoke", action="store_true", help="shrink sweeps to a CI-sized subset"
+    )
+    args = parser.parse_args(argv)
+
+    from benchmarks import (
+        fig5_scalability,
+        fig7_system,
+        noise_accuracy,
+        org_accuracy,
+        table5_dpu,
+    )
 
     benches = [
         ("fig5_scalability", fig5_scalability.main),
         ("table5_dpu", table5_dpu.main),
         ("fig7_system", fig7_system.main),
         ("noise_accuracy", noise_accuracy.main),
+        ("org_accuracy", org_accuracy.main),
     ]
     # roofline report requires dry-run results; degrade gracefully.
     try:
@@ -26,20 +50,38 @@ def main() -> None:
         pass
 
     failures = []
+    report = {"smoke": args.smoke, "benches": {}}
     for name, fn in benches:
         print(f"\n===== {name} =====")
         t0 = time.time()
+        derived = None
         try:
-            fn()
+            derived = fn(smoke=args.smoke)
+            status = "ok"
             print(f"{name},{(time.time()-t0)*1e6:.0f},ok")
         except Exception:
             failures.append(name)
+            status = "failed"
             traceback.print_exc()
             print(f"{name},{(time.time()-t0)*1e6:.0f},FAILED")
+        report["benches"][name] = {
+            "wall_s": round(time.time() - t0, 3),
+            "status": status,
+            "derived": derived,
+        }
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    # Smoke runs land in a separate (gitignored) file so the committed
+    # trajectory only ever contains full-sweep numbers.
+    name = "BENCH_photonic_smoke.json" if args.smoke else "BENCH_photonic.json"
+    out_path = RESULTS_DIR / name
+    out_path.write_text(json.dumps(report, indent=1, default=str))
+    print(f"\nwrote {out_path}")
+
     if failures:
         print("FAILED:", failures)
         sys.exit(1)
-    print("\nall benchmarks ok")
+    print("all benchmarks ok")
 
 
 if __name__ == "__main__":

@@ -17,9 +17,18 @@ A DPU executes a GEMM by:
    **dequantizing**.
 
 With no noise/saturation enabled the model is *numerically exact*: it equals
-the integer GEMM of the quantized operands (tested).  Optional per-psum
-analog noise and ADC saturation model the analog non-idealities the paper's
-power-penalty analysis guards against.
+the integer GEMM of the quantized operands (tested).  Analog non-idealities
+are modeled by an organization-aware :class:`repro.noise.ChannelModel`
+(crosstalk per Table II, loss-chain-derived detector noise per Tables
+III–IV, filter truncation, ADC quantization/saturation — see DESIGN.md §8);
+the legacy scalar ``noise_sigma_lsb`` is kept as a shorthand for a
+detector-noise-only channel.
+
+Noise determinism: every noisy call needs an explicit randomness source —
+either ``prng_key`` (same key => bitwise-identical result) or the
+``DPUConfig.noise_seed`` field (the documented deterministic path used when
+no key can be threaded, e.g. the model serving stack).  A noisy call with
+neither raises ``ValueError`` rather than silently drawing fresh noise.
 
 This module is the pure-jnp oracle; ``repro.kernels.photonic_gemm`` provides
 the TPU Pallas kernel with identical semantics (fused slicing + chunked
@@ -38,6 +47,13 @@ import jax.numpy as jnp
 
 from repro.core import scalability
 from repro.core.params import PhotonicParams
+from repro.noise.channel import ChannelModel, analog_pass_psums
+from repro.noise.stages import (
+    data_tweak,
+    fold_seed,
+    key_zero_cotangent,
+    seed_from_key,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,8 +66,13 @@ class DPUConfig:
     datarate_gs: float = 5.0   # symbol rate [GS/s]
     dpe_size: Optional[int] = None   # N; None -> calibrated scalability solver
     dpu_fanout: Optional[int] = None  # M; None -> = N (paper assumption)
-    noise_sigma_lsb: float = 0.0     # analog noise std per psum, in LSBs
+    noise_sigma_lsb: float = 0.0     # legacy: detector-noise-only channel
     adc_bits: Optional[int] = None   # ADC saturation range; None = ideal
+    # Structural analog channel (repro.noise); overrides noise_sigma_lsb.
+    channel: Optional[ChannelModel] = None
+    # Deterministic noise seed used when no prng_key is threaded to a call
+    # (the documented deterministic path; see module docstring).
+    noise_seed: Optional[int] = None
 
     @property
     def n(self) -> int:
@@ -83,6 +104,45 @@ class DPUConfig:
     def num_chunks(self, k: int) -> int:
         """psum chunks for a contraction of length k."""
         return -(-k // self.n)
+
+    def effective_channel(self) -> Optional[ChannelModel]:
+        """The channel model this config implies (None = ideal datapath).
+
+        ``channel`` wins when set (inheriting ``adc_bits`` from the config
+        if the channel leaves it unset); a bare ``noise_sigma_lsb`` maps to
+        a detector-noise-only channel; ADC-only configs return None and keep
+        the exact-integer path with saturation (bit-compatible with the
+        pre-channel behavior).
+        """
+        if self.channel is not None:
+            ch = self.channel
+            if ch.adc_bits is None and self.adc_bits is not None:
+                ch = dataclasses.replace(ch, adc_bits=self.adc_bits)
+            return ch
+        if self.noise_sigma_lsb > 0.0:
+            return ChannelModel(
+                organization=self.organization,
+                bits=self.bits,
+                datarate_gs=self.datarate_gs,
+                detector_sigma_lsb=self.noise_sigma_lsb,
+                adc_bits=self.adc_bits,
+            )
+        return None
+
+    def noise_seed_array(
+        self, prng_key: Optional[jax.Array], *, what: str = "noise"
+    ) -> jax.Array:
+        """uint32 stream seed from ``prng_key`` or ``noise_seed`` (in that
+        order), raising the documented error when neither is given."""
+        if prng_key is not None:
+            return seed_from_key(prng_key)
+        if self.noise_seed is not None:
+            return jnp.uint32(self.noise_seed & 0xFFFFFFFF)
+        raise ValueError(
+            f"{what} requires a randomness source: pass prng_key or set "
+            "DPUConfig.noise_seed (deterministic; same seed => bitwise-equal "
+            "results)"
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -146,14 +206,28 @@ def dpu_int_gemm(
 ) -> jax.Array:
     """Integer GEMM through the DPU datapath. Returns int32 (R, C).
 
-    Exactly equals ``xq.astype(i32) @ wq.astype(i32)`` when
-    ``noise_sigma_lsb == 0`` and ``adc_bits is None``.
+    Exactly equals ``xq.astype(i32) @ wq.astype(i32)`` when the effective
+    channel is ideal (no analog stages, no ADC saturation).  With an analog
+    channel, each slice-pair pass routes its per-chunk psums through the
+    full signal chain (:func:`repro.noise.analog_pass_psums`); the noise
+    stream derives from ``prng_key`` or ``cfg.noise_seed`` (same source =>
+    bitwise-identical output).
     """
     r, k = xq.shape
     k2, c = wq.shape
     assert k == k2, (xq.shape, wq.shape)
     n = cfg.n
     s = cfg.num_slices
+    channel = cfg.effective_channel()
+    analog = channel is not None and channel.analog
+    adc_bits = channel.adc_bits if channel is not None else cfg.adc_bits
+    seed = None
+    if analog and channel.detector_sigma_lsb > 0.0:
+        # Operand-content tweak decorrelates same-seed, same-shape calls
+        # (layers of one model / QAT steps) without losing determinism.
+        seed = data_tweak(
+            cfg.noise_seed_array(prng_key, what="detector noise"), xq, wq
+        )
 
     # psum chunking of the contraction dimension (electronic reduction).
     xq = _pad_to(xq, 1, n)
@@ -167,30 +241,27 @@ def dpu_int_gemm(
     w_sl = bit_slices(w_c, cfg.bits, s)      # (S, chunks, N, C)
 
     out = jnp.zeros((r, c), jnp.int32)
-    noise_idx = 0
     for si in range(s):
         for ti in range(s):
-            # Analog multiply-accumulate inside each chunk: one optical pass.
-            psum = jnp.einsum(
-                "rgn,gnc->rgc",
-                x_sl[si].astype(jnp.int32),
-                w_sl[ti].astype(jnp.int32),
-                preferred_element_type=jnp.int32,
-            )  # (R, chunks, C) — per-chunk psums, pre-ADC
-            if cfg.noise_sigma_lsb > 0.0:
-                if prng_key is None:
-                    raise ValueError("noise_sigma_lsb > 0 requires prng_key")
-                key = jax.random.fold_in(prng_key, noise_idx)
-                noise = jnp.round(
-                    cfg.noise_sigma_lsb
-                    * jax.random.normal(key, psum.shape, jnp.float32)
-                ).astype(jnp.int32)
-                psum = psum + noise
-                noise_idx += 1
-            if cfg.adc_bits is not None:
-                lim = 2 ** (cfg.adc_bits - 1) - 1
-                psum = jnp.clip(psum, -lim, lim)
             shift = cfg.bits * (si + ti)
+            if analog:
+                # Full signal chain: crosstalk -> filter -> detector noise
+                # -> ADC, one optical pass per slice pair.
+                pass_seed = fold_seed(
+                    seed if seed is not None else jnp.uint32(0), si * s + ti
+                )
+                psum = analog_pass_psums(x_sl[si], w_sl[ti], channel, pass_seed)
+            else:
+                # Exact integer route (ideal or ADC-saturation-only).
+                psum = jnp.einsum(
+                    "rgn,gnc->rgc",
+                    x_sl[si].astype(jnp.int32),
+                    w_sl[ti].astype(jnp.int32),
+                    preferred_element_type=jnp.int32,
+                )  # (R, chunks, C) — per-chunk psums, pre-ADC
+                if adc_bits is not None:
+                    lim = 2 ** (adc_bits - 1) - 1
+                    psum = jnp.clip(psum, -lim, lim)
             out = out + (psum.sum(axis=1) << shift)
     return out
 
@@ -202,8 +273,15 @@ def photonic_matmul(
     *,
     prng_key: Optional[jax.Array] = None,
     w_scale_axis: Optional[int] = 0,
+    channel: Optional[ChannelModel] = None,
 ) -> jax.Array:
-    """Float-in / float-out GEMM executed through the photonic DPU model."""
+    """Float-in / float-out GEMM executed through the photonic DPU model.
+
+    ``channel`` overrides ``cfg.channel`` for one call (convenient for
+    sweeping organizations / stage ablations over a fixed config).
+    """
+    if channel is not None:
+        cfg = dataclasses.replace(cfg, channel=channel)
     lead = x.shape[:-1]
     k = x.shape[-1]
     xr = x.reshape(-1, k)
@@ -218,25 +296,42 @@ def photonic_matmul(
 # Straight-through estimator for training through the photonic path
 # ---------------------------------------------------------------------------
 @partial(jax.custom_vjp, nondiff_argnums=(2,))
-def photonic_matmul_ste(x: jax.Array, w: jax.Array, cfg: DPUConfig) -> jax.Array:
-    return photonic_matmul(x, w, cfg)
+def _photonic_matmul_ste(
+    x: jax.Array, w: jax.Array, cfg: DPUConfig, prng_key
+) -> jax.Array:
+    return photonic_matmul(x, w, cfg, prng_key=prng_key)
 
 
-def _ste_fwd(x, w, cfg):
-    return photonic_matmul(x, w, cfg), (x, w)
+def _ste_fwd(x, w, cfg, prng_key):
+    return photonic_matmul(x, w, cfg, prng_key=prng_key), (x, w, prng_key)
 
 
 def _ste_bwd(cfg, res, g):
-    x, w = res
-    lead = x.shape[:-1]
+    x, w, prng_key = res
     g2 = g.reshape(-1, g.shape[-1])
     x2 = x.reshape(-1, x.shape[-1])
     dx = (g2 @ w.T.astype(g2.dtype)).reshape(x.shape).astype(x.dtype)
     dw = (x2.T.astype(g2.dtype) @ g2).astype(w.dtype)
-    return dx, dw
+    return dx, dw, key_zero_cotangent(prng_key)
 
 
-photonic_matmul_ste.defvjp(_ste_fwd, _ste_bwd)
+_photonic_matmul_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def photonic_matmul_ste(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: DPUConfig,
+    prng_key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """QAT-style forward through the (optionally noisy) photonic datapath;
+    backward is the straight-through dense-matmul gradient.
+
+    With ``cfg.channel`` set (or ``noise_sigma_lsb``), the forward pass sees
+    the organization's analog perturbations — pass ``prng_key`` (or set
+    ``cfg.noise_seed``) so the noise draw is explicit and reproducible.
+    """
+    return _photonic_matmul_ste(x, w, cfg, prng_key)
 
 
 # ---------------------------------------------------------------------------

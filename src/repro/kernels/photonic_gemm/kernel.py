@@ -12,11 +12,19 @@ TPU-native adaptation of the paper's DPU datapath (DESIGN.md §3):
   (one read per operand) while the MXU consumes one slice-pair per pass —
   mirroring the temporal passes of the photonic DPU.
 
+Analog channel stages (DESIGN.md §8) run *inside* the kernel so the noisy
+path needs no extra HBM traffic: inter-modulation / cross-weight crosstalk
+as extra chunk-local MXU passes against neighbor-shifted operands, filter
+truncation as a psum scale, detector noise from a counter-based gaussian
+generator (`repro.noise.stages`) seeded by a scalar SMEM input — bitwise
+deterministic for a fixed seed + tiling, statistically matching the jnp
+oracle (which draws from flat, untiled streams).
+
 Blocking: grid ``(R/TR, C/TC, K/TK)`` with the K axis innermost so the output
 tile stays resident in VMEM and accumulates across K-tiles (standard Pallas
 matmul accumulation).  ``TK`` must be a multiple of ``n_chunk``; MXU-aligned
-tiles (multiples of 128) are used when ADC fidelity is off (chunking is then
-numerically irrelevant), and exact-N chunks when it is on.
+tiles (multiples of 128) are used when ADC/analog fidelity is off (chunking
+is then numerically irrelevant), and exact-N chunks when it is on.
 """
 
 from __future__ import annotations
@@ -30,18 +38,41 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.noise.stages import fold_seed, gaussian_from_counter, neighbor_sum
+
+
+def _f32_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
 
 
 def _kernel(
-    x_ref,
-    w_ref,
-    out_ref,
-    *,
+    *refs,
     slice_bits: int,
     num_slices: int,
     n_chunk: int,
     adc_bits: Optional[int],
+    noise_sigma: float,
+    filter_alpha: float,
+    intermod_eps: float,
+    crossweight_eps: float,
+    valid_chunks: Optional[int],
 ):
+    analog = (
+        noise_sigma > 0.0
+        or filter_alpha > 0.0
+        or intermod_eps > 0.0
+        or crossweight_eps > 0.0
+    )
+    if analog:
+        seed_ref, x_ref, w_ref, out_ref = refs
+    else:
+        x_ref, w_ref, out_ref = refs
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
@@ -56,13 +87,23 @@ def _kernel(
     sgn_w, mag_w = jnp.sign(w), jnp.abs(w)
     mask = (1 << slice_bits) - 1
 
+    if analog:
+        # Per-tile noise stream: seed x grid position (bitwise deterministic
+        # for fixed seed and tiling; independent across tiles).
+        tile_seed = fold_seed(
+            seed_ref[0].astype(jnp.uint32),
+            pl.program_id(0),
+            pl.program_id(1),
+            pl.program_id(2),
+        )
+
     acc = jnp.zeros((tr, tc), jnp.int32)
     for si in range(num_slices):
         xs = sgn_x * ((mag_x >> (slice_bits * si)) & mask)
         for ti in range(num_slices):
             ws = sgn_w * ((mag_w >> (slice_bits * ti)) & mask)
             shift = slice_bits * (si + ti)
-            if adc_bits is None and chunks >= 1:
+            if not analog and adc_bits is None and chunks >= 1:
                 # Ideal ADC: chunk boundaries are numerically irrelevant —
                 # one MXU pass over the whole K-tile.
                 psum = jax.lax.dot_general(
@@ -73,17 +114,47 @@ def _kernel(
                 )
                 acc = acc + (psum << shift)
             else:
-                # DPU-faithful: saturate each N-size chunk psum at the ADC.
-                lim = 2 ** (adc_bits - 1) - 1
+                # DPU-faithful: run each N-size chunk through the analog
+                # signal chain (crosstalk -> filter -> noise -> ADC).
+                lim = 2 ** (adc_bits - 1) - 1 if adc_bits is not None else None
                 for g in range(chunks):
                     sl = slice(g * n_chunk, (g + 1) * n_chunk)
+                    x_c, w_c = xs[:, sl], ws[sl, :]
                     psum = jax.lax.dot_general(
-                        xs[:, sl],
-                        ws[sl, :],
+                        x_c,
+                        w_c,
                         (((1,), (0,)), ((), ())),
                         preferred_element_type=jnp.int32,
                     )
-                    psum = jnp.clip(psum, -lim, lim)
+                    if analog:
+                        a = psum.astype(jnp.float32)
+                        if intermod_eps > 0.0:
+                            a = a + intermod_eps * _f32_dot(
+                                neighbor_sum(x_c, axis=1), w_c
+                            )
+                        if crossweight_eps > 0.0:
+                            a = a + crossweight_eps * _f32_dot(
+                                x_c, neighbor_sum(w_c, axis=0)
+                            )
+                        if filter_alpha > 0.0:
+                            a = a * (1.0 - filter_alpha)
+                        if noise_sigma > 0.0:
+                            z = gaussian_from_counter(
+                                fold_seed(tile_seed, si * num_slices + ti, g),
+                                a.shape,
+                            )
+                            if valid_chunks is not None:
+                                # Chunks entirely inside K-padding carry no
+                                # data and fire no optical pass — mask their
+                                # noise so variance matches the oracle.
+                                gchunk = pl.program_id(2) * chunks + g
+                                z = z * (gchunk < valid_chunks).astype(
+                                    jnp.float32
+                                )
+                            a = a + noise_sigma * z
+                        psum = jnp.round(a).astype(jnp.int32)
+                    if lim is not None:
+                        psum = jnp.clip(psum, -lim, lim)
                     acc = acc + (psum << shift)
     out_ref[...] += acc
 
@@ -95,6 +166,11 @@ def _kernel(
         "num_slices",
         "n_chunk",
         "adc_bits",
+        "noise_sigma",
+        "filter_alpha",
+        "intermod_eps",
+        "crossweight_eps",
+        "valid_chunks",
         "tile_r",
         "tile_c",
         "tile_k",
@@ -104,11 +180,17 @@ def _kernel(
 def photonic_gemm_pallas(
     xq: jax.Array,  # (R, K) int8, R % tile_r == 0, K % tile_k == 0
     wq: jax.Array,  # (K, C) int8, C % tile_c == 0
+    seed: Optional[jax.Array] = None,  # int32 scalar (1,), required if noisy
     *,
     slice_bits: int = 4,
     num_slices: int = 2,
     n_chunk: int = 128,
     adc_bits: Optional[int] = None,
+    noise_sigma: float = 0.0,
+    filter_alpha: float = 0.0,
+    intermod_eps: float = 0.0,
+    crossweight_eps: float = 0.0,
+    valid_chunks: Optional[int] = None,
     tile_r: int = 128,
     tile_c: int = 128,
     tile_k: int = 512,
@@ -122,6 +204,14 @@ def photonic_gemm_pallas(
         (tile_r, tile_c, tile_k),
     )
     assert tile_k % n_chunk == 0, (tile_k, n_chunk)
+    analog = (
+        noise_sigma > 0.0
+        or filter_alpha > 0.0
+        or intermod_eps > 0.0
+        or crossweight_eps > 0.0
+    )
+    if noise_sigma > 0.0 and seed is None:
+        raise ValueError("noise_sigma > 0 requires a seed")
 
     grid = (r // tile_r, c // tile_c, k // tile_k)
     kernel = functools.partial(
@@ -130,18 +220,30 @@ def photonic_gemm_pallas(
         num_slices=num_slices,
         n_chunk=n_chunk,
         adc_bits=adc_bits,
+        noise_sigma=noise_sigma,
+        filter_alpha=filter_alpha,
+        intermod_eps=intermod_eps,
+        crossweight_eps=crossweight_eps,
+        valid_chunks=valid_chunks,
     )
+    in_specs = [
+        pl.BlockSpec((tile_r, tile_k), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((tile_k, tile_c), lambda i, j, kk: (kk, j)),
+    ]
+    args = [xq, wq]
+    if analog:
+        if seed is None:
+            seed = jnp.zeros((1,), jnp.int32)
+        in_specs.insert(0, pl.BlockSpec(memory_space=pltpu.SMEM))
+        args.insert(0, jnp.asarray(seed, jnp.int32).reshape(1))
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile_r, tile_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((tile_k, tile_c), lambda i, j, kk: (kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((tile_r, tile_c), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
         compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(xq, wq)
+    )(*args)

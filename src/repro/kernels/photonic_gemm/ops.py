@@ -7,6 +7,14 @@ Backend selection:
 * ``"ref"``      — the pure-jnp oracle (portable, differentiably wrapped);
 * ``"exact"``    — plain int GEMM of the quantized operands (the ideal the
                    DPU converges to; useful as an upper bound in tests).
+
+Analog channel semantics (DESIGN.md §8): the backends honour
+``cfg.effective_channel()``.  ``"ref"`` is bitwise-equal to
+``repro.core.dpu.dpu_int_gemm`` under noise (same stream derivation);
+``"pallas"`` injects noise in-kernel from tile-local streams and agrees
+with the oracle statistically.  ``"exact"`` ignores the channel by design.
+Noisy calls need ``prng_key`` or ``cfg.noise_seed`` (deterministic: same
+source => same result for a fixed backend and tiling).
 """
 
 from __future__ import annotations
@@ -20,6 +28,7 @@ import jax.numpy as jnp
 from repro.core.dpu import DPUConfig, quantize_symmetric
 from repro.kernels.photonic_gemm.kernel import photonic_gemm_pallas
 from repro.kernels.photonic_gemm.ref import exact_int_gemm, photonic_gemm_ref
+from repro.noise.stages import data_tweak, key_zero_cotangent
 
 
 def _round_up(x: int, m: int) -> int:
@@ -39,12 +48,23 @@ def photonic_gemm_int(
     interpret: Optional[bool] = None,
     tile_r: int = 128,
     tile_c: int = 128,
+    prng_key: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Integer-level DPU GEMM with automatic padding to kernel tiles."""
     if backend == "exact":
         return exact_int_gemm(xq, wq)
 
     n = cfg.n
+    channel = cfg.effective_channel()
+    analog = channel is not None and channel.analog
+    adc_bits = channel.adc_bits if channel is not None else cfg.adc_bits
+    noisy = analog and channel.detector_sigma_lsb > 0.0
+    # Same seed derivation as dpu_int_gemm (content tweak included) so the
+    # "ref" backend stays bitwise-equal to the oracle.
+    seed = (
+        data_tweak(cfg.noise_seed_array(prng_key), xq, wq) if noisy else None
+    )
+
     if backend == "ref":
         return photonic_gemm_ref(
             xq,
@@ -52,7 +72,9 @@ def photonic_gemm_int(
             slice_bits=cfg.bits,
             num_slices=cfg.num_slices,
             n_chunk=n,
-            adc_bits=cfg.adc_bits,
+            adc_bits=adc_bits,
+            channel=channel,
+            seed=seed,
         )
 
     assert backend == "pallas", backend
@@ -60,7 +82,7 @@ def photonic_gemm_int(
         interpret = _on_cpu()
     r, k = xq.shape
     _, c = wq.shape
-    if cfg.adc_bits is None:
+    if adc_bits is None and not analog:
         # Chunking numerically irrelevant -> MXU-aligned tiles.
         n_chunk = 128
         tile_k = 512 if k >= 512 else _round_up(max(k, 128), 128)
@@ -76,13 +98,20 @@ def photonic_gemm_int(
     rp, kp, cp = _round_up(r, tile_r), _round_up(k, tile_k), _round_up(c, tile_c)
     xp = jnp.pad(xq, ((0, rp - r), (0, kp - k)))
     wp = jnp.pad(wq, ((0, kp - k), (0, cp - c)))
+    ch = channel
     out = photonic_gemm_pallas(
         xp,
         wp,
+        None if seed is None else seed.astype(jnp.int32).reshape(1),
         slice_bits=cfg.bits,
         num_slices=cfg.num_slices,
         n_chunk=n_chunk,
-        adc_bits=cfg.adc_bits,
+        adc_bits=adc_bits,
+        noise_sigma=ch.detector_sigma_lsb if analog else 0.0,
+        filter_alpha=ch.filter_alpha if analog else 0.0,
+        intermod_eps=ch.intermod_eps if analog else 0.0,
+        crossweight_eps=ch.crossweight_eps if analog else 0.0,
+        valid_chunks=-(-k // n_chunk) if noisy else None,
         tile_r=tile_r,
         tile_c=tile_c,
         tile_k=tile_k,
@@ -92,37 +121,48 @@ def photonic_gemm_int(
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _photonic_gemm(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: DPUConfig,
+    backend: str,
+    prng_key,
+) -> jax.Array:
+    return _photonic_gemm_fwd_impl(x, w, cfg, backend, prng_key)
+
+
+def _photonic_gemm_fwd_impl(x, w, cfg, backend, prng_key):
+    lead = x.shape[:-1]
+    xr = x.reshape(-1, x.shape[-1])
+    xq, sx = quantize_symmetric(xr, cfg.operand_bits)
+    wq, sw = quantize_symmetric(w, cfg.operand_bits, axis=0)
+    out = photonic_gemm_int(xq, wq, cfg, backend=backend, prng_key=prng_key)
+    y = out.astype(jnp.float32) * sx * sw
+    return y.reshape(*lead, w.shape[1]).astype(x.dtype)
+
+
+def _fwd(x, w, cfg, backend, prng_key):
+    return _photonic_gemm_fwd_impl(x, w, cfg, backend, prng_key), (x, w, prng_key)
+
+
+def _bwd(cfg, backend, res, g):
+    x, w, prng_key = res
+    g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    dx = (g2 @ w.astype(jnp.float32).T).reshape(x.shape).astype(x.dtype)
+    dw = (x2.T @ g2).astype(w.dtype)
+    return dx, dw, key_zero_cotangent(prng_key)
+
+
+_photonic_gemm.defvjp(_fwd, _bwd)
+
+
 def photonic_gemm(
     x: jax.Array,
     w: jax.Array,
     cfg: DPUConfig = DPUConfig(),
     backend: str = "pallas",
+    prng_key: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Float GEMM through the photonic DPU. Differentiable via STE."""
-    return _photonic_gemm_fwd_impl(x, w, cfg, backend)
-
-
-def _photonic_gemm_fwd_impl(x, w, cfg, backend):
-    lead = x.shape[:-1]
-    xr = x.reshape(-1, x.shape[-1])
-    xq, sx = quantize_symmetric(xr, cfg.operand_bits)
-    wq, sw = quantize_symmetric(w, cfg.operand_bits, axis=0)
-    out = photonic_gemm_int(xq, wq, cfg, backend=backend)
-    y = out.astype(jnp.float32) * sx * sw
-    return y.reshape(*lead, w.shape[1]).astype(x.dtype)
-
-
-def _fwd(x, w, cfg, backend):
-    return _photonic_gemm_fwd_impl(x, w, cfg, backend), (x, w)
-
-
-def _bwd(cfg, backend, res, g):
-    x, w = res
-    g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
-    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    dx = (g2 @ w.astype(jnp.float32).T).reshape(x.shape).astype(x.dtype)
-    dw = (x2.T @ g2).astype(w.dtype)
-    return dx, dw
-
-
-photonic_gemm.defvjp(_fwd, _bwd)
+    return _photonic_gemm(x, w, cfg, backend, prng_key)

@@ -4,6 +4,12 @@ Implements exactly the kernel's semantics — signed-magnitude bit-slicing,
 DPE-size (N) psum chunking with optional ADC saturation, shift-add recombine —
 with no Pallas, no tiling.  Used by tests as the gold reference and by the
 models as the portable fallback backend.
+
+With a :class:`repro.noise.ChannelModel` the oracle applies the full analog
+signal chain per slice-pair pass, using the same seed/stream derivation as
+``repro.core.dpu.dpu_int_gemm`` (the two are bitwise equal under noise); the
+Pallas kernel draws its noise from tile-local streams and agrees with the
+oracle *statistically* (mean/variance), not bitwise.
 """
 
 from __future__ import annotations
@@ -12,6 +18,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.noise.channel import ChannelModel, analog_pass_psums
+from repro.noise.stages import fold_seed
 
 
 def slice_decompose(q: jax.Array, slice_bits: int, num_slices: int) -> list:
@@ -31,10 +40,17 @@ def photonic_gemm_ref(
     num_slices: int = 2,
     n_chunk: int = 128,
     adc_bits: Optional[int] = None,
+    channel: Optional[ChannelModel] = None,
+    seed: Optional[jax.Array] = None,  # uint32; required if channel has noise
 ) -> jax.Array:
     """Reference int32 GEMM through the DPU datapath."""
     r, k = xq.shape
     _, c = wq.shape
+    analog = channel is not None and channel.analog
+    if analog and channel.detector_sigma_lsb > 0.0 and seed is None:
+        raise ValueError("channel with detector noise requires a seed")
+    if channel is not None and channel.adc_bits is not None:
+        adc_bits = channel.adc_bits
     pad = (-k) % n_chunk
     if pad:
         xq = jnp.pad(xq, ((0, 0), (0, pad)))
@@ -50,13 +66,21 @@ def photonic_gemm_ref(
         xs = x_sl[si].reshape(r, chunks, n_chunk)
         for ti in range(num_slices):
             ws = w_sl[ti].reshape(chunks, n_chunk, c)
-            psum = jnp.einsum(
-                "rgn,gnc->rgc", xs, ws, preferred_element_type=jnp.int32
-            )
-            if adc_bits is not None:
-                lim = 2 ** (adc_bits - 1) - 1
-                psum = jnp.clip(psum, -lim, lim)
-            out = out + (psum.sum(axis=1) << (slice_bits * (si + ti)))
+            shift = slice_bits * (si + ti)
+            if analog:
+                pass_seed = fold_seed(
+                    seed if seed is not None else jnp.uint32(0),
+                    si * num_slices + ti,
+                )
+                psum = analog_pass_psums(xs, ws, channel, pass_seed)
+            else:
+                psum = jnp.einsum(
+                    "rgn,gnc->rgc", xs, ws, preferred_element_type=jnp.int32
+                )
+                if adc_bits is not None:
+                    lim = 2 ** (adc_bits - 1) - 1
+                    psum = jnp.clip(psum, -lim, lim)
+            out = out + (psum.sum(axis=1) << shift)
     return out
 
 

@@ -1,0 +1,46 @@
+"""`repro.noise` — differentiable per-organization analog channel model.
+
+Maps an organization + :class:`~repro.core.params.PhotonicParams` + DPE
+geometry to a structural :class:`ChannelModel` (Tables II–IV quantified),
+and provides the composable signal-chain stages the numeric datapath
+(`repro.core.dpu`, `repro.kernels.photonic_gemm`) applies per optical pass.
+See DESIGN.md §8.
+"""
+
+from repro.noise.channel import (
+    ChannelModel,
+    analog_pass_psums,
+    apply_channel_psum,
+    build_channel_model,
+)
+from repro.noise.stages import (
+    adc_quantize,
+    data_tweak,
+    detector_noise,
+    filter_truncation,
+    fold_seed,
+    gaussian_from_counter,
+    hash_mix32,
+    key_zero_cotangent,
+    neighbor_sum,
+    round_ste,
+    seed_from_key,
+)
+
+__all__ = [
+    "ChannelModel",
+    "analog_pass_psums",
+    "apply_channel_psum",
+    "build_channel_model",
+    "adc_quantize",
+    "data_tweak",
+    "detector_noise",
+    "key_zero_cotangent",
+    "filter_truncation",
+    "fold_seed",
+    "gaussian_from_counter",
+    "hash_mix32",
+    "neighbor_sum",
+    "round_ste",
+    "seed_from_key",
+]

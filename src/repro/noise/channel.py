@@ -1,0 +1,314 @@
+"""Organization-aware analog channel model (paper Tables II–IV, DESIGN.md §8).
+
+:func:`build_channel_model` maps an organization (ASMW / MASW / SMWA), the
+photonic link parameters of Table IV, and a DPE geometry (fan-in ``N``,
+fan-out ``M``, analog precision ``B``, ``N_lambda`` WDM channels) to a
+:class:`ChannelModel` — a frozen, hashable description of every signal
+manipulation the DPU applies to a psum:
+
+* **loss chain** (Table III): through loss over the out-of-resonance rings a
+  channel traverses (``2(N-1)`` for ASMW, ``N`` for MASW, ``2`` for SMWA),
+  propagation loss over the organization's waveguide length, splitter /
+  insertion losses, the 1:M fan-out split, and the lumped network penalty —
+  composing into the delivered power of Eq. 3;
+* **detector noise** (Eq. 1–2): the shot/thermal/RIN-limited SNR at the
+  delivered power, converted to a gaussian psum sigma in integer LSBs;
+* **crosstalk** (Table II): inter-modulation and cross-weight leakage as
+  adjacent-channel amplitude couplings, filter truncation as an amplitude
+  compression — present/absent per organization exactly as Table II states;
+* **ADC**: round-to-LSB plus optional saturation at ``adc_bits``.
+
+Every stage is individually toggleable (set its magnitude to zero / pass the
+corresponding ``enable_*`` flag to the builder) and the applied chain
+(:func:`analog_pass_psums`, :func:`apply_channel_psum`) is jit/vmap
+compatible and differentiable (``round_ste`` where non-smooth).  With all
+stages disabled the datapath takes the exact integer route and is
+bit-identical to the ideal DPU GEMM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scalability
+from repro.core.organizations import (
+    CROSSTALK,
+    EFFECT_BUDGET_DB,
+    LOSSES,
+    through_device_count,
+)
+from repro.core.params import PhotonicParams, dbm_to_watts
+from repro.noise import stages
+
+
+# ---------------------------------------------------------------------------
+# The structural channel model
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ChannelModel:
+    """Signal-chain model of one DPU channel (frozen => static under jit)."""
+
+    organization: str = "SMWA"
+    n: int = 1                     # DPE fan-in (psum chunk length)
+    m: int = 1                     # fan-out
+    bits: int = 4                  # analog slice precision B
+    num_wavelengths: int = 1       # N_lambda WDM channels (= n for the DPU)
+    datarate_gs: float = 5.0
+
+    # Stage magnitudes; 0.0 / None = stage disabled.
+    intermod_eps: float = 0.0      # inter-modulation coupling per neighbor
+    crossweight_eps: float = 0.0   # cross-weight coupling per neighbor
+    filter_alpha: float = 0.0      # filter-truncation amplitude compression
+    detector_sigma_lsb: float = 0.0  # gaussian psum noise std [psum LSBs]
+    adc_bits: Optional[int] = None   # ADC saturation range; None = ideal
+
+    # Loss-chain bookkeeping [dB] (reports / structure tests; delivered
+    # power already folds these in via Eq. 3).
+    through_loss_db: float = 0.0
+    propagation_loss_db: float = 0.0
+    splitter_loss_db: float = 0.0
+    insertion_loss_db: float = 0.0
+    fanout_split_db: float = 0.0
+    penalty_db: float = 0.0
+    delivered_dbm: float = 0.0
+    snr_db: float = math.inf
+
+    @property
+    def analog(self) -> bool:
+        """True when any float-valued analog stage is active (the datapath
+        must then leave the exact integer route)."""
+        return (
+            self.intermod_eps > 0.0
+            or self.crossweight_eps > 0.0
+            or self.filter_alpha > 0.0
+            or self.detector_sigma_lsb > 0.0
+        )
+
+    @property
+    def is_ideal(self) -> bool:
+        return not self.analog and self.adc_bits is None
+
+    def total_loss_db(self) -> float:
+        return (
+            self.through_loss_db
+            + self.propagation_loss_db
+            + self.splitter_loss_db
+            + self.insertion_loss_db
+            + self.fanout_split_db
+            + self.penalty_db
+        )
+
+    def disable(self, *stage_names: str) -> "ChannelModel":
+        """Return a copy with the named stages off.
+
+        Names: ``intermod``, ``crossweight``, ``filter``, ``detector``,
+        ``adc``; ``crosstalk`` = intermod + crossweight + filter (the three
+        Table II mechanisms); ``all`` = everything.
+        """
+        off = {
+            "intermod": {"intermod_eps": 0.0},
+            "crossweight": {"crossweight_eps": 0.0},
+            "filter": {"filter_alpha": 0.0},
+            "detector": {"detector_sigma_lsb": 0.0},
+            "adc": {"adc_bits": None},
+        }
+        groups = {
+            "crosstalk": ("intermod", "crossweight", "filter"),
+            "all": tuple(off),
+        }
+        updates: Dict[str, object] = {}
+        for s in stage_names:
+            for name in groups.get(s, (s,)):
+                if name not in off:
+                    raise ValueError(f"unknown stage {s!r}")
+                updates.update(off[name])
+        return dataclasses.replace(self, **updates)
+
+
+# ---------------------------------------------------------------------------
+# Builder: organization + PhotonicParams + geometry -> ChannelModel
+# ---------------------------------------------------------------------------
+def _budget_to_coupling(budget_db: float) -> float:
+    """Map a per-effect power budget (paper §IV-C) to a per-neighbor
+    amplitude coupling: the budget bounds the worst-case amplitude error
+    contributed by the two adjacent channels, so each neighbor couples with
+    ``(1 - 10^(-budget/20)) / 2``."""
+    return (1.0 - 10.0 ** (-budget_db / 20.0)) / 2.0
+
+
+def build_channel_model(
+    organization: str,
+    params: Optional[PhotonicParams] = None,
+    *,
+    n: Optional[int] = None,
+    m: Optional[int] = None,
+    bits: int = 4,
+    datarate_gs: float = 5.0,
+    adc_bits: Optional[int] = None,
+    enable_loss: bool = True,
+    enable_crosstalk: bool = True,
+    enable_detector_noise: bool = True,
+    enable_adc: bool = True,
+) -> ChannelModel:
+    """Derive the quantitative channel model for one organization.
+
+    ``n`` defaults to the calibrated achievable DPE size at (B, DR);
+    ``m`` defaults to ``n`` (paper assumption).  ``enable_loss=False`` zeroes
+    the loss chain *for the SNR computation* (the detector then sees the
+    full laser power), which isolates the crosstalk stages in ablations.
+    """
+    org = organization.upper()
+    params = params or scalability.CALIBRATED
+    if n is None:
+        n = scalability.calibrated_max_n(org, bits, datarate_gs)
+        if n <= 0:
+            raise ValueError(
+                f"infeasible operating point {org} B={bits} DR={datarate_gs}"
+            )
+    if m is None:
+        m = n
+
+    loss = LOSSES[org]
+    through_db = through_device_count(org, n) * params.p_mrm_obl_db
+    prop_db = (
+        params.p_si_att_db_per_mm * loss.waveguide_length_factor * n * params.d_mrr_mm
+        + params.p_smf_att_db
+    )
+    split_db = params.p_splitter_il_db * math.log2(max(m, 2))
+    il_db = params.p_ec_il_db + params.p_mrm_il_db + params.p_mrr_w_il_db
+    fanout_db = 10.0 * math.log10(max(m, 1))
+    penalty_db = params.penalty_db(org)
+
+    # Delivered power (Eq. 3, org-aware through loss) and the SNR it buys.
+    if enable_loss:
+        delivered_dbm = scalability.output_power_dbm(n, m, org, params)
+    else:
+        delivered_dbm = params.p_laser_dbm
+    p_ch = dbm_to_watts(delivered_dbm)
+    bw = datarate_gs * 1e9 / params.bw_divisor
+    # Eq. 1 link SNR (solver convention: noise beta at per-channel power) —
+    # equals the B-bit ENOB requirement at the calibrated achievable N.
+    snr_amp = params.responsivity * p_ch / (
+        scalability.noise_beta(p_ch, params) * math.sqrt(bw)
+    )
+    snr_db = 20.0 * math.log10(snr_amp) if snr_amp > 0 else -math.inf
+
+    sigma = 0.0
+    if enable_detector_noise:
+        # The BPD sees the *aggregate* of the chunk's N channels and adds
+        # ONE noise draw per psum sample (the paper's Eq. 1 sizes the link
+        # per channel; the aggregate draw is the beyond-paper refinement).
+        # Composition mirrors Eq. 2's two-branch balanced-PD convention:
+        # shot scales with the total received power, thermal (4kT/R_L —
+        # dominant at these powers) is fixed, and RIN adds in quadrature
+        # over the N *independent* WDM lasers (N * (R P)^2, not (N R P)^2).
+        # Referred to the per-symbol product full-scale of (2^B - 1)^2
+        # psum LSBs.
+        from repro.core.params import K_BOLTZMANN, Q_ELECTRON
+
+        r_s = params.responsivity
+        shot = 2.0 * Q_ELECTRON * (r_s * n * p_ch + params.i_dark)
+        thermal = 4.0 * K_BOLTZMANN * params.temperature / params.r_load
+        rin = n * (r_s * p_ch) ** 2 * params.rin_linear_per_hz
+        dark_branch = 2.0 * Q_ELECTRON * params.i_dark + thermal
+        noise_amp = (
+            math.sqrt(shot + thermal + rin) + math.sqrt(dark_branch)
+        ) * math.sqrt(bw)
+        fullscale = float((2**bits - 1) ** 2)
+        sigma = fullscale * noise_amp / max(r_s * p_ch, 1e-30)
+
+    xt = CROSSTALK[org]
+    eps_im = eps_cw = alpha = 0.0
+    if enable_crosstalk:
+        if xt.inter_modulation:
+            eps_im = _budget_to_coupling(EFFECT_BUDGET_DB["inter_modulation"])
+        if xt.cross_weight:
+            eps_cw = _budget_to_coupling(EFFECT_BUDGET_DB["cross_weight"])
+        if xt.filter_truncation:
+            alpha = 1.0 - 10.0 ** (-EFFECT_BUDGET_DB["filter_truncation"] / 20.0)
+
+    return ChannelModel(
+        organization=org,
+        n=n,
+        m=m,
+        bits=bits,
+        num_wavelengths=n,
+        datarate_gs=datarate_gs,
+        intermod_eps=eps_im,
+        crossweight_eps=eps_cw,
+        filter_alpha=alpha,
+        detector_sigma_lsb=sigma,
+        adc_bits=adc_bits if enable_adc else None,
+        through_loss_db=through_db,
+        propagation_loss_db=prop_db,
+        splitter_loss_db=split_db,
+        insertion_loss_db=il_db,
+        fanout_split_db=fanout_db,
+        penalty_db=penalty_db,
+        delivered_dbm=delivered_dbm,
+        snr_db=snr_db,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Channel application (the oracle-side analog pass)
+# ---------------------------------------------------------------------------
+def analog_pass_psums(
+    x_chunks: jax.Array,  # (R, G, N) int — one operand slice, chunked
+    w_chunks: jax.Array,  # (G, N, C) int — one weight slice, chunked
+    channel: ChannelModel,
+    seed: jax.Array,      # uint32 stream seed (stages.fold_seed output)
+) -> jax.Array:
+    """One slice-pair optical pass through the full signal chain.
+
+    Returns int32 per-chunk psums ``(R, G, C)`` after crosstalk, filter
+    truncation, detector noise, and the ADC.  The wavelength axis is the
+    chunk-local ``N`` axis; leakage never crosses chunk (DPE) boundaries.
+    """
+    xs = x_chunks.astype(jnp.int32)
+    ws = w_chunks.astype(jnp.int32)
+    psum = jnp.einsum(
+        "rgn,gnc->rgc", xs, ws, preferred_element_type=jnp.int32
+    )
+    a = psum.astype(jnp.float32)
+    if channel.intermod_eps > 0.0:
+        # Modulated symbols leak into spectrally-adjacent channels *before*
+        # weighting (Table II: inter-modulation crosstalk).
+        x_nb = stages.neighbor_sum(xs, axis=-1).astype(jnp.float32)
+        a = a + channel.intermod_eps * jnp.einsum(
+            "rgn,gnc->rgc", x_nb, ws.astype(jnp.float32)
+        )
+    if channel.crossweight_eps > 0.0:
+        # A weight ring partially drops/weights the adjacent wavelengths
+        # (Table II: cross-weight crosstalk).
+        w_nb = stages.neighbor_sum(ws, axis=1).astype(jnp.float32)
+        a = a + channel.crossweight_eps * jnp.einsum(
+            "rgn,gnc->rgc", xs.astype(jnp.float32), w_nb
+        )
+    if channel.filter_alpha > 0.0:
+        a = stages.filter_truncation(a, channel.filter_alpha)
+    if channel.detector_sigma_lsb > 0.0:
+        a = stages.detector_noise(a, channel.detector_sigma_lsb, seed)
+    return stages.adc_quantize(a, channel.adc_bits)
+
+
+def apply_channel_psum(
+    a: jax.Array,
+    channel: ChannelModel,
+    seed: jax.Array,
+    *,
+    differentiable: bool = True,
+) -> jax.Array:
+    """Post-accumulation stages only (filter -> noise -> ADC) on a float
+    psum array — the differentiable entry point for training-time noise
+    models that keep operands in float."""
+    if channel.filter_alpha > 0.0:
+        a = stages.filter_truncation(a, channel.filter_alpha)
+    if channel.detector_sigma_lsb > 0.0:
+        a = stages.detector_noise(a, channel.detector_sigma_lsb, seed)
+    return stages.adc_quantize(a, channel.adc_bits, differentiable=differentiable)
