@@ -31,6 +31,7 @@ def main(argv=None) -> None:
         fig7_system,
         noise_accuracy,
         org_accuracy,
+        prepack_decode,
         table5_dpu,
     )
 
@@ -40,6 +41,7 @@ def main(argv=None) -> None:
         ("fig7_system", fig7_system.main),
         ("noise_accuracy", noise_accuracy.main),
         ("org_accuracy", org_accuracy.main),
+        ("prepack_decode", prepack_decode.main),
     ]
     # roofline report requires dry-run results; degrade gracefully.
     try:

@@ -5,6 +5,10 @@ with every weight GEMM routed through the photonic SMWA DPU datapath
 (int8, bit-sliced, psum-chunked) — then repeats with the exact float path
 and reports agreement + throughput.
 
+The serving engine is weight-stationary: at construction it prepacks every
+policy-routed weight once (``repro.photonic.packing``), so decode steps
+stream activations against packed int8 banks and never re-quantize.
+
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
 
@@ -28,6 +32,8 @@ def run(photonic: bool, params, arch, cfg, prompts):
             photonic_backend="ref",
         )
     eng = serve.Engine(arch, cfg, params, serve.ServeConfig(batch_size=4, max_seq=64))
+    if eng.photonic is not None:
+        print(f"  engine: {eng.photonic.describe()} (weights prepacked once)")
     reqs = [
         serve.Request(uid=i, prompt=p, max_new_tokens=8) for i, p in enumerate(prompts)
     ]

@@ -2,7 +2,10 @@
 fault-tolerance stack (checkpoint/resume, straggler watchdog, preemption).
 
 Pass --photonic to train *through* the photonic DPU forward path
-(straight-through-estimator backward) — photonic-aware QAT.
+(straight-through-estimator backward) — photonic-aware QAT.  Routing is
+per-site (repro.photonic.SitePolicy): by default every weight GEMM goes
+photonic except MoE routers; narrow it with e.g.
+``photonic_include=("ffn.*",)`` on the ModelConfig.
 
 Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--photonic]
 """

@@ -161,7 +161,12 @@ def quantize_symmetric(
     amax = jnp.max(jnp.abs(x)) if axis is None else jnp.max(
         jnp.abs(x), axis=axis, keepdims=True
     )
-    scale = jnp.maximum(amax, 1e-12) / qmax
+    # Explicit reciprocal multiply: XLA's algebraic simplifier rewrites
+    # divide-by-constant to exactly this inside compiled contexts (jit /
+    # scan bodies), so spelling it out keeps the scale BITWISE identical
+    # between eager calls and compiled ones — the invariant the prepacked
+    # weight path (repro.photonic.packing) relies on.
+    scale = jnp.maximum(amax, 1e-12) * (1.0 / qmax)
     q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
     dtype = jnp.int8 if bits <= 8 else jnp.int32
     return q.astype(dtype), scale.astype(jnp.float32)

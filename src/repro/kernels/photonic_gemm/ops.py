@@ -1,5 +1,13 @@
 """Public jit'd entry points for the photonic GEMM kernel.
 
+Since the ``repro.photonic`` engine refactor these are *thin
+compatibility wrappers*: both functions delegate to
+:class:`repro.photonic.engine.PhotonicEngine` with ``site=None`` (no
+site folding), which reproduces the pre-engine behavior bit-for-bit —
+same backend dispatch, same tiling, same seed derivation.  New code
+should use the engine directly (per-site routing, prepacked weights,
+threaded PRNG keys).
+
 ``photonic_gemm(x, w, cfg)`` — float in/out, quantize → kernel → dequantize.
 Backend selection:
 
@@ -19,24 +27,12 @@ source => same result for a fixed backend and tiling).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.dpu import DPUConfig, quantize_symmetric
-from repro.kernels.photonic_gemm.kernel import photonic_gemm_pallas
-from repro.kernels.photonic_gemm.ref import exact_int_gemm, photonic_gemm_ref
-from repro.noise.stages import data_tweak, key_zero_cotangent
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+from repro.core.dpu import DPUConfig
+from repro.photonic.engine import PhotonicEngine, engine_for
 
 
 def photonic_gemm_int(
@@ -51,110 +47,15 @@ def photonic_gemm_int(
     prng_key: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Integer-level DPU GEMM with automatic padding to kernel tiles."""
-    if backend == "exact":
-        return exact_int_gemm(xq, wq)
-
-    n = cfg.n
-    channel = cfg.effective_channel()
-    analog = channel is not None and channel.analog
-    adc_bits = channel.adc_bits if channel is not None else cfg.adc_bits
-    noisy = analog and channel.detector_sigma_lsb > 0.0
-    # Same seed derivation as dpu_int_gemm (content tweak included) so the
-    # "ref" backend stays bitwise-equal to the oracle.
-    seed = (
-        data_tweak(cfg.noise_seed_array(prng_key), xq, wq) if noisy else None
-    )
-
-    if backend == "ref":
-        return photonic_gemm_ref(
-            xq,
-            wq,
-            slice_bits=cfg.bits,
-            num_slices=cfg.num_slices,
-            n_chunk=n,
-            adc_bits=adc_bits,
-            channel=channel,
-            seed=seed,
-        )
-
-    assert backend == "pallas", backend
-    if interpret is None:
-        interpret = _on_cpu()
-    r, k = xq.shape
-    _, c = wq.shape
-    if adc_bits is None and not analog:
-        # Chunking numerically irrelevant -> MXU-aligned tiles.
-        n_chunk = 128
-        tile_k = 512 if k >= 512 else _round_up(max(k, 128), 128)
-        n_chunk = min(n_chunk, tile_k)
-    else:
-        # DPU-faithful chunking at the achievable DPE size N.
-        n_chunk = n
-        per_tile = max(1, 512 // n)
-        tile_k = n * per_tile
-    tile_r = min(tile_r, _round_up(r, 8))
-    tile_c = min(tile_c, _round_up(c, 128))
-
-    rp, kp, cp = _round_up(r, tile_r), _round_up(k, tile_k), _round_up(c, tile_c)
-    xp = jnp.pad(xq, ((0, rp - r), (0, kp - k)))
-    wp = jnp.pad(wq, ((0, kp - k), (0, cp - c)))
-    ch = channel
-    out = photonic_gemm_pallas(
-        xp,
-        wp,
-        None if seed is None else seed.astype(jnp.int32).reshape(1),
-        slice_bits=cfg.bits,
-        num_slices=cfg.num_slices,
-        n_chunk=n_chunk,
-        adc_bits=adc_bits,
-        noise_sigma=ch.detector_sigma_lsb if analog else 0.0,
-        filter_alpha=ch.filter_alpha if analog else 0.0,
-        intermod_eps=ch.intermod_eps if analog else 0.0,
-        crossweight_eps=ch.crossweight_eps if analog else 0.0,
-        valid_chunks=-(-k // n_chunk) if noisy else None,
+    eng = engine_for(cfg, backend)
+    return eng.int_gemm(
+        xq,
+        wq,
+        prng_key=prng_key,
+        interpret=interpret,
         tile_r=tile_r,
         tile_c=tile_c,
-        tile_k=tile_k,
-        interpret=interpret,
     )
-    return out[:r, :c]
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def _photonic_gemm(
-    x: jax.Array,
-    w: jax.Array,
-    cfg: DPUConfig,
-    backend: str,
-    prng_key,
-) -> jax.Array:
-    return _photonic_gemm_fwd_impl(x, w, cfg, backend, prng_key)
-
-
-def _photonic_gemm_fwd_impl(x, w, cfg, backend, prng_key):
-    lead = x.shape[:-1]
-    xr = x.reshape(-1, x.shape[-1])
-    xq, sx = quantize_symmetric(xr, cfg.operand_bits)
-    wq, sw = quantize_symmetric(w, cfg.operand_bits, axis=0)
-    out = photonic_gemm_int(xq, wq, cfg, backend=backend, prng_key=prng_key)
-    y = out.astype(jnp.float32) * sx * sw
-    return y.reshape(*lead, w.shape[1]).astype(x.dtype)
-
-
-def _fwd(x, w, cfg, backend, prng_key):
-    return _photonic_gemm_fwd_impl(x, w, cfg, backend, prng_key), (x, w, prng_key)
-
-
-def _bwd(cfg, backend, res, g):
-    x, w, prng_key = res
-    g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
-    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    dx = (g2 @ w.astype(jnp.float32).T).reshape(x.shape).astype(x.dtype)
-    dw = (x2.T @ g2).astype(w.dtype)
-    return dx, dw, key_zero_cotangent(prng_key)
-
-
-_photonic_gemm.defvjp(_fwd, _bwd)
 
 
 def photonic_gemm(
@@ -165,4 +66,4 @@ def photonic_gemm(
     prng_key: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Float GEMM through the photonic DPU. Differentiable via STE."""
-    return _photonic_gemm(x, w, cfg, backend, prng_key)
+    return engine_for(cfg, backend).matmul_float(x, w, prng_key=prng_key)

@@ -42,6 +42,7 @@ def run_cell(
     mesh_kind: str,
     *,
     photonic: bool = False,
+    photonic_scope: str = "weights",
     save_hlo: bool = False,
     overrides: dict | None = None,
     variant: str = "base",
@@ -75,9 +76,16 @@ def run_cell(
             cfg,
             photonic=DPUConfig(organization="SMWA", bits=4, datarate_gs=5.0),
             photonic_backend="ref",
+            photonic_scope=photonic_scope,
         )
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
+
+    # Engine-routed photonic GEMMs: constructing the engine here validates
+    # the operating point + site policy before any lowering work.
+    from repro.models.common import engine_from_model_config
+
+    eng = engine_from_model_config(cfg)
 
     defs = arch.param_defs(cfg)
     param_axes = axes_tree(defs)
@@ -98,6 +106,7 @@ def run_cell(
         "param_count": sum(
             int(jnp.prod(jnp.array(l.shape))) for l in compat.tree_leaves(param_sds)
         ),
+        "photonic_engine": None if eng is None else eng.describe(),
     }
 
     def build(bcfg):
@@ -375,6 +384,9 @@ def main():
     ap.add_argument("--annotate", action="store_true")
     ap.add_argument("--annotate-cell", action="store_true")
     ap.add_argument("--photonic", action="store_true")
+    ap.add_argument("--photonic-scope", default="weights",
+                    choices=["none", "weights", "weights_int8"],
+                    help="which weight GEMMs the engine routes (with --photonic)")
     ap.add_argument("--dp-shardmap", action="store_true",
                     help="shard_map-pinned DP train step (replicated params)")
     ap.add_argument("--dp-compress", action="store_true",
@@ -419,7 +431,8 @@ def main():
     try:
         out = run_cell(
             args.arch, args.shape, args.mesh,
-            photonic=args.photonic, save_hlo=args.save_hlo,
+            photonic=args.photonic, photonic_scope=args.photonic_scope,
+            save_hlo=args.save_hlo,
             overrides=overrides or None, variant=variant,
             zero1=not args.no_zero1,
             dp_shardmap=args.dp_shardmap, dp_compress=args.dp_compress,

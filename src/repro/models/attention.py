@@ -143,11 +143,12 @@ def gqa_attention(
     positions: jax.Array,  # (T,)
     causal: bool = True,
     q_offset: int = 0,
+    layer: Optional[jax.Array] = None,
 ) -> jax.Array:
     h, kv = cfg.n_q_heads, cfg.num_kv_heads
-    q = _split_heads(dense(params["wq"], x, cfg), h)
-    k = _split_heads(dense(params["wk"], x, cfg), kv)
-    v = _split_heads(dense(params["wv"], x, cfg), kv)
+    q = _split_heads(dense(params["wq"], x, cfg, site="attn.wq", layer=layer), h)
+    k = _split_heads(dense(params["wk"], x, cfg, site="attn.wk", layer=layer), kv)
+    v = _split_heads(dense(params["wv"], x, cfg, site="attn.wv", layer=layer), kv)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     q = cm.with_logical(q, ("batch", None, "heads", None))
@@ -159,25 +160,25 @@ def gqa_attention(
         acc_dtype=jnp.float32 if cfg.attn_f32 else jnp.bfloat16,
     )
     out = out.reshape(*x.shape[:2], -1)
-    return dense(params["wo"], out, cfg)
+    return dense(params["wo"], out, cfg, site="attn.wo", layer=layer)
 
 
 def gqa_prefill(
-    params, x, cfg: ModelConfig, *, positions, max_seq: int
+    params, x, cfg: ModelConfig, *, positions, max_seq: int, layer=None
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Self-attention over the prompt + returns a padded KV cache."""
     h, kv = cfg.n_q_heads, cfg.num_kv_heads
     b, t, _ = x.shape
-    q = _split_heads(dense(params["wq"], x, cfg), h)
-    k = _split_heads(dense(params["wk"], x, cfg), kv)
-    v = _split_heads(dense(params["wv"], x, cfg), kv)
+    q = _split_heads(dense(params["wq"], x, cfg, site="attn.wq", layer=layer), h)
+    k = _split_heads(dense(params["wk"], x, cfg, site="attn.wk", layer=layer), kv)
+    v = _split_heads(dense(params["wv"], x, cfg, site="attn.wv", layer=layer), kv)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     out = chunked_attention(
         q, k, v, causal=True, chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
         acc_dtype=jnp.float32 if cfg.attn_f32 else jnp.bfloat16,
     )
-    out = dense(params["wo"], out.reshape(b, t, -1), cfg)
+    out = dense(params["wo"], out.reshape(b, t, -1), cfg, site="attn.wo", layer=layer)
     pad4 = ((0, 0), (0, max_seq - t), (0, 0), (0, 0))
     pad3 = ((0, 0), (0, max_seq - t), (0, 0))
     if cfg.kv_cache_int8:
@@ -213,12 +214,14 @@ def gqa_decode(
     cache: Dict[str, jax.Array],
     pos: jax.Array,  # scalar int32 — current length
     cfg: ModelConfig,
+    *,
+    layer: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     h, kv = cfg.n_q_heads, cfg.num_kv_heads
     b = x.shape[0]
-    q = _split_heads(dense(params["wq"], x, cfg), h)
-    k1 = _split_heads(dense(params["wk"], x, cfg), kv)
-    v1 = _split_heads(dense(params["wv"], x, cfg), kv)
+    q = _split_heads(dense(params["wq"], x, cfg, site="attn.wq", layer=layer), h)
+    k1 = _split_heads(dense(params["wk"], x, cfg, site="attn.wk", layer=layer), kv)
+    v1 = _split_heads(dense(params["wv"], x, cfg, site="attn.wv", layer=layer), kv)
     posv = pos[None] if pos.ndim == 0 else pos
     q = apply_rope(q, posv, cfg.rope_theta)
     k1 = apply_rope(k1, posv, cfg.rope_theta)
@@ -250,7 +253,10 @@ def gqa_decode(
     s = jnp.where((kv_pos <= pos)[None, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqs,bshd->bqhd", p, vf, preferred_element_type=jnp.float32)
-    out = dense(params["wo"], out.reshape(b, 1, -1).astype(x.dtype), cfg)
+    out = dense(
+        params["wo"], out.reshape(b, 1, -1).astype(x.dtype), cfg,
+        site="attn.wo", layer=layer,
+    )
     return out, {"k": ck, "v": cv, **new_cache}
 
 
@@ -283,62 +289,80 @@ def cross_attention(
     cfg: ModelConfig,
     *,
     gated: bool = False,
+    layer: Optional[jax.Array] = None,
 ) -> jax.Array:
     h = cfg.n_q_heads
     b, t, _ = x.shape
-    q = _split_heads(dense(params["wq"], x, cfg), h)
+    q = _split_heads(dense(params["wq"], x, cfg, site="attn.wq", layer=layer), h)
     k, v = memory_kv
     out = chunked_attention(
         q, k, v, causal=False, chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
         acc_dtype=jnp.float32 if cfg.attn_f32 else jnp.bfloat16,
     )
-    out = dense(params["wo"], out.reshape(b, t, -1), cfg)
+    out = dense(params["wo"], out.reshape(b, t, -1), cfg, site="attn.wo", layer=layer)
     if gated:
         out = jnp.tanh(params["gate"].astype(out.dtype)) * out
     return out
 
 
-def cross_kv(params, memory: jax.Array, cfg: ModelConfig):
+def cross_kv(params, memory: jax.Array, cfg: ModelConfig, layer=None):
     """Precompute cross-attention K/V from encoder/vision states."""
     kv = cfg.num_kv_heads
-    k = _split_heads(dense(params["wk"], memory, cfg), kv)
-    v = _split_heads(dense(params["wv"], memory, cfg), kv)
+    k = _split_heads(dense(params["wk"], memory, cfg, site="attn.wk", layer=layer), kv)
+    v = _split_heads(dense(params["wv"], memory, cfg, site="attn.wv", layer=layer), kv)
     return k, v
 
 
 # ---------------------------------------------------------------------------
 # MLA (multi-head latent attention, DeepSeek-V2)
 # ---------------------------------------------------------------------------
-def _mla_qkv(params, x, cfg: ModelConfig, positions):
+def _mla_up_weight(p: Dict[str, Any]) -> jax.Array:
+    """Float view of an MLA up-projection weight for the absorbed-decode
+    einsums (dequantizing a prepacked / int8-stored layout if needed)."""
+    from repro.photonic.packing import PackedDense
+
+    w = p["w"]
+    if isinstance(w, PackedDense):
+        return w.dequant()
+    if "w_scale" in p:
+        return w.astype(jnp.float32) * p["w_scale"].astype(jnp.float32)[None, :]
+    return w
+
+
+
+def _mla_qkv(params, x, cfg: ModelConfig, positions, layer=None):
     h = cfg.n_q_heads
     nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
     b, t, _ = x.shape
-    q = dense(params["wq"], x, cfg).reshape(b, t, h, nope + rope)
+    q = dense(params["wq"], x, cfg, site="attn.wq", layer=layer)
+    q = q.reshape(b, t, h, nope + rope)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
 
-    dkv = dense(params["wdkv"], x, cfg)  # (B,T,r+rope)
+    dkv = dense(params["wdkv"], x, cfg, site="attn.wdkv", layer=layer)  # (B,T,r+rope)
     c_kv, k_rope = dkv[..., : cfg.kv_lora_rank], dkv[..., cfg.kv_lora_rank:]
     k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,T,1,rope)
     return q_nope, q_rope, c_kv, k_rope
 
 
-def _mla_expand_kv(params, c_kv, k_rope, cfg: ModelConfig):
+def _mla_expand_kv(params, c_kv, k_rope, cfg: ModelConfig, layer=None):
     h = cfg.n_q_heads
     nope, vd = cfg.qk_nope_head_dim, cfg.v_head_dim
     b, t, _ = c_kv.shape
-    k_nope = dense(params["wuk"], c_kv, cfg).reshape(b, t, h, nope)
-    v = dense(params["wuv"], c_kv, cfg).reshape(b, t, h, vd)
+    k_nope = dense(params["wuk"], c_kv, cfg, site="attn.wuk", layer=layer)
+    k_nope = k_nope.reshape(b, t, h, nope)
+    v = dense(params["wuv"], c_kv, cfg, site="attn.wuv", layer=layer)
+    v = v.reshape(b, t, h, vd)
     k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, t, h, k_rope.shape[-1]))], -1)
     return k, v
 
 
 def mla_attention(
-    params, x, cfg: ModelConfig, *, positions, causal: bool = True
+    params, x, cfg: ModelConfig, *, positions, causal: bool = True, layer=None
 ) -> jax.Array:
     b, t, _ = x.shape
-    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, cfg, positions)
-    k, v = _mla_expand_kv(params, c_kv, k_rope, cfg)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, cfg, positions, layer)
+    k, v = _mla_expand_kv(params, c_kv, k_rope, cfg, layer)
     q = jnp.concatenate([q_nope, q_rope], -1)
     scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
     out = chunked_attention(
@@ -346,13 +370,13 @@ def mla_attention(
         chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
         acc_dtype=jnp.float32 if cfg.attn_f32 else jnp.bfloat16,
     )
-    return dense(params["wo"], out.reshape(b, t, -1), cfg)
+    return dense(params["wo"], out.reshape(b, t, -1), cfg, site="attn.wo", layer=layer)
 
 
-def mla_prefill(params, x, cfg: ModelConfig, *, positions, max_seq: int):
+def mla_prefill(params, x, cfg: ModelConfig, *, positions, max_seq: int, layer=None):
     b, t, _ = x.shape
-    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, cfg, positions)
-    k, v = _mla_expand_kv(params, c_kv, k_rope, cfg)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, cfg, positions, layer)
+    k, v = _mla_expand_kv(params, c_kv, k_rope, cfg, layer)
     q = jnp.concatenate([q_nope, q_rope], -1)
     scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
     out = chunked_attention(
@@ -360,7 +384,7 @@ def mla_prefill(params, x, cfg: ModelConfig, *, positions, max_seq: int):
         chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
         acc_dtype=jnp.float32 if cfg.attn_f32 else jnp.bfloat16,
     )
-    out = dense(params["wo"], out.reshape(b, t, -1), cfg)
+    out = dense(params["wo"], out.reshape(b, t, -1), cfg, site="attn.wo", layer=layer)
     pad = max_seq - t
     cache = {
         "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
@@ -369,7 +393,7 @@ def mla_prefill(params, x, cfg: ModelConfig, *, positions, max_seq: int):
     return out, cache
 
 
-def mla_decode_absorbed(params, x, cache, pos, cfg: ModelConfig):
+def mla_decode_absorbed(params, x, cache, pos, cfg: ModelConfig, layer=None):
     """MLA decode with the up-projections ABSORBED into the query/output
     paths (DeepSeek-V2 serving trick): attention runs directly against the
     compressed c_kv cache — no (B, S, H, head_dim) K/V expansion, cutting
@@ -381,7 +405,7 @@ def mla_decode_absorbed(params, x, cache, pos, cfg: ModelConfig):
         cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
     )
     posv = pos[None] if pos.ndim == 0 else pos
-    q_nope, q_rope, c_kv1, k_rope1 = _mla_qkv(params, x, cfg, posv)
+    q_nope, q_rope, c_kv1, k_rope1 = _mla_qkv(params, x, cfg, posv, layer)
     c = jax.lax.dynamic_update_slice_in_dim(
         cache["c_kv"], c_kv1.astype(cache["c_kv"].dtype), pos, 1
     )
@@ -391,8 +415,8 @@ def mla_decode_absorbed(params, x, cache, pos, cfg: ModelConfig):
     c = cm.with_logical(c, ("batch", "kv_seq", None))
     kr = cm.with_logical(kr, ("batch", "kv_seq", None))
 
-    w_uk = params["wuk"]["w"].astype(jnp.float32).reshape(r, h, nope)
-    w_uv = params["wuv"]["w"].astype(jnp.float32).reshape(r, h, vd)
+    w_uk = _mla_up_weight(params["wuk"]).astype(jnp.float32).reshape(r, h, nope)
+    w_uv = _mla_up_weight(params["wuv"]).astype(jnp.float32).reshape(r, h, vd)
     # absorb W_uk into q:  q_abs[b,h,r] = sum_n q_nope[b,1,h,n] W_uk[r,h,n]
     q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32), w_uk)
     cf = c.astype(jnp.float32)
@@ -407,17 +431,20 @@ def mla_decode_absorbed(params, x, cache, pos, cfg: ModelConfig):
     p = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhqs,bsr->bqhr", p, cf)          # attention over c_kv
     out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv)      # absorb W_uv
-    out = dense(params["wo"], out.reshape(b, 1, -1).astype(x.dtype), cfg)
+    out = dense(
+        params["wo"], out.reshape(b, 1, -1).astype(x.dtype), cfg,
+        site="attn.wo", layer=layer,
+    )
     return out, {"c_kv": c, "k_rope": kr}
 
 
-def mla_decode(params, x, cache, pos, cfg: ModelConfig):
+def mla_decode(params, x, cache, pos, cfg: ModelConfig, layer=None):
     """MLA decode against the *compressed* cache (c_kv + k_rope only)."""
     if cfg.mla_absorb:
-        return mla_decode_absorbed(params, x, cache, pos, cfg)
+        return mla_decode_absorbed(params, x, cache, pos, cfg, layer)
     b = x.shape[0]
     posv = pos[None] if pos.ndim == 0 else pos
-    q_nope, q_rope, c_kv1, k_rope1 = _mla_qkv(params, x, cfg, posv)
+    q_nope, q_rope, c_kv1, k_rope1 = _mla_qkv(params, x, cfg, posv, layer)
     c = jax.lax.dynamic_update_slice_in_dim(
         cache["c_kv"], c_kv1.astype(cache["c_kv"].dtype), pos, 1
     )
@@ -426,7 +453,7 @@ def mla_decode(params, x, cache, pos, cfg: ModelConfig):
     )
     c = cm.with_logical(c, ("batch", "kv_seq", None))
     kr = cm.with_logical(kr, ("batch", "kv_seq", None))
-    k, v = _mla_expand_kv(params, c, kr[:, :, None, :], cfg)
+    k, v = _mla_expand_kv(params, c, kr[:, :, None, :], cfg, layer)
     q = jnp.concatenate([q_nope, q_rope], -1)
     scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
     qf = q.astype(jnp.float32) * scale
@@ -435,7 +462,10 @@ def mla_decode(params, x, cache, pos, cfg: ModelConfig):
     s = jnp.where((jnp.arange(s_max) <= pos)[None, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqs,bshd->bqhd", p, v.astype(jnp.float32))
-    out = dense(params["wo"], out.reshape(b, 1, -1).astype(x.dtype), cfg)
+    out = dense(
+        params["wo"], out.reshape(b, 1, -1).astype(x.dtype), cfg,
+        site="attn.wo", layer=layer,
+    )
     return out, {"c_kv": c, "k_rope": kr}
 
 

@@ -86,11 +86,34 @@ class ModelConfig:
     seq_shard_residual: bool = True  # sequence-parallel residual stream
     photonic: Optional[DPUConfig] = None
     photonic_backend: str = "ref"    # ref | pallas | exact
-    photonic_scope: str = "weights"  # weights | none
+    # Which weights execute photonically (when `photonic` is set):
+    #   "none"         — photonic config carried but no GEMM routed;
+    #   "weights"      — float-stored weights, quantized per call (QAT/train);
+    #   "weights_int8" — int8-stored weights (photonic serving layout).
+    photonic_scope: str = "weights"  # none | weights | weights_int8
+    # Per-site routing policy (repro.photonic.SitePolicy patterns, matched
+    # against dotted site names like "ffn.router" and their last component).
+    # The MoE router stays digital by default — expert-routing decisions are
+    # control flow; opt it in with photonic_exclude=().
+    photonic_include: Tuple[str, ...] = ("*",)
+    photonic_exclude: Tuple[str, ...] = ("router",)
 
     # Structural padding applied for mesh divisibility (see pad_for_mesh) ----
     padded_heads: Optional[int] = None
     padded_vocab: Optional[int] = None
+
+    def __post_init__(self):
+        scopes = ("none", "weights", "weights_int8")
+        if self.photonic_scope not in scopes:
+            raise ValueError(
+                f"photonic_scope={self.photonic_scope!r} is not one of {scopes}"
+            )
+        backends = ("ref", "pallas", "exact")
+        if self.photonic_backend not in backends:
+            raise ValueError(
+                f"photonic_backend={self.photonic_backend!r} is not one of "
+                f"{backends}"
+            )
 
     @property
     def hd(self) -> int:
@@ -239,31 +262,71 @@ def qdense_def(
     bias: bool = False,
     init: str = "fan_in",
 ) -> Dict[str, P]:
-    """dense_def that stores int8 weights when the photonic int8 scope is on."""
+    """dense_def that stores int8 weights when ``photonic_scope`` is
+    ``"weights_int8"`` (accepted scopes: ``none | weights | weights_int8``,
+    validated by :class:`ModelConfig`)."""
     quantized = cfg.photonic is not None and cfg.photonic_scope == "weights_int8"
     return dense_def(d_in, d_out, axes, bias=bias, init=init, quantized=quantized)
 
 
-def dense(params: Dict[str, Any], x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    """Linear layer; routes through the photonic DPU backend when enabled."""
+def engine_from_model_config(cfg: ModelConfig):
+    """The :class:`repro.photonic.PhotonicEngine` a model config implies,
+    or ``None`` when no GEMM is photonic (``photonic=None`` or scope
+    ``"none"``)."""
+    from repro.photonic.engine import engine_for
+
+    if cfg.photonic is None or cfg.photonic_scope == "none":
+        return None
+    return engine_for(
+        cfg.photonic,
+        cfg.photonic_backend,
+        tuple(cfg.photonic_include),
+        tuple(cfg.photonic_exclude),
+    )
+
+
+def dense(
+    params: Dict[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    site: Optional[str] = None,
+    layer: Optional[jax.Array] = None,
+    prng_key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Linear layer; routes through the photonic engine when enabled.
+
+    ``site`` names this GEMM for the engine's routing policy and seed
+    derivation ("attn.wq", "ffn.router", "lm_head", ...); ``layer`` is an
+    optional (traceable) stack index folded into the noise stream so
+    same-shaped layers inside a ``lax.scan`` decorrelate; ``prng_key``
+    threads an explicit randomness source end-to-end (a noisy channel
+    with neither a key nor ``DPUConfig.noise_seed`` raises the documented
+    ``ValueError``).
+    """
+    from repro.photonic.packing import PackedDense
+
     w = params["w"]
-    if "w_scale" in params:
-        # int8-stored weights through the DPU integer datapath
-        from repro.core.dpu import DPUConfig, quantize_symmetric
-        from repro.kernels.photonic_gemm.ops import photonic_gemm_int
+    eng = engine_from_model_config(cfg)
+    if isinstance(w, PackedDense):
+        if eng is None:
+            y = x @ w.dequant().astype(x.dtype)
+        else:
+            y = eng.matmul(x, w, site=site, fold=layer, prng_key=prng_key)
+    elif "w_scale" in params:
+        # int8-stored weights through the DPU integer datapath (legacy
+        # layout; the engine wraps them as an unpadded pack on the fly).
+        if eng is None:
+            from repro.core.dpu import DPUConfig
+            from repro.photonic.engine import engine_for
 
-        dpu = cfg.photonic or DPUConfig()
-        lead = x.shape[:-1]
-        xr = x.reshape(-1, x.shape[-1])
-        xq, sx = quantize_symmetric(xr, dpu.operand_bits)
-        out = photonic_gemm_int(xq, w, dpu, backend=cfg.photonic_backend)
-        scale = params["w_scale"].astype(jnp.float32)[None, :]
-        y = (out.astype(jnp.float32) * sx * scale).reshape(*lead, w.shape[1])
-        y = y.astype(x.dtype)
-    elif cfg.photonic is not None and cfg.photonic_scope == "weights":
-        from repro.kernels.photonic_gemm.ops import photonic_gemm
-
-        y = photonic_gemm(x, w, cfg.photonic, cfg.photonic_backend)
+            eng = engine_for(DPUConfig(), cfg.photonic_backend)
+        packed = PackedDense(
+            w, params["w_scale"], w.shape[-2], w.shape[-1], tiling=None
+        )
+        y = eng.matmul(x, packed, site=site, fold=layer, prng_key=prng_key)
+    elif eng is not None and cfg.photonic_scope == "weights":
+        y = eng.matmul_float(x, w, site=site, fold=layer, prng_key=prng_key)
     else:
         y = x @ w.astype(x.dtype)
     if "b" in params:
@@ -279,7 +342,9 @@ def quantize_params(params: Any, defs: Any) -> Any:
         # reducing the contraction axis only.
         w = params["w"].astype(jnp.float32)
         amax = jnp.max(jnp.abs(w), axis=-2)
-        scale = jnp.maximum(amax, 1e-12) / 127.0
+        # Reciprocal multiply: bitwise-stable across eager/compiled contexts
+        # (see quantize_symmetric).
+        scale = jnp.maximum(amax, 1e-12) * (1.0 / 127.0)
         q = jnp.clip(
             jnp.round(w / jnp.expand_dims(scale, -2)), -127, 127
         ).astype(jnp.int8)

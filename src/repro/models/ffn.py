@@ -33,14 +33,14 @@ def mlp_def(cfg: ModelConfig, d_ff: int | None = None) -> Dict[str, Any]:
     }
 
 
-def mlp(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    h = dense(params["wi"], x, cfg)
+def mlp(params, x: jax.Array, cfg: ModelConfig, layer=None, site="ffn") -> jax.Array:
+    h = dense(params["wi"], x, cfg, site=f"{site}.wi", layer=layer)
     if cfg.ffn_act == "swiglu":
         u, g = jnp.split(h, 2, axis=-1)
         h = u * jax.nn.silu(g)
     else:
         h = jax.nn.gelu(h)
-    return dense(params["wo"], h, cfg)
+    return dense(params["wo"], h, cfg, site=f"{site}.wo", layer=layer)
 
 
 # ---------------------------------------------------------------------------
@@ -63,13 +63,23 @@ def _capacity(cfg: ModelConfig, tokens: int) -> int:
     return max(c, 1)
 
 
-def moe(params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
-    """Returns (output, aux load-balancing loss)."""
+def moe(params, x: jax.Array, cfg: ModelConfig, layer=None) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux load-balancing loss).
+
+    The router projection carries the site name ``"ffn.router"``: under
+    the default :class:`repro.photonic.SitePolicy` it executes *digitally*
+    even when every other weight GEMM is photonic — expert selection is
+    control flow, and analog noise on near-uniform router logits flips
+    top-k membership.  Opt it in with ``ModelConfig.photonic_exclude=()``.
+    """
     b, t, d = x.shape
     e, k = cfg.num_experts, cfg.num_experts_per_tok
     cap = _capacity(cfg, t)
 
-    logits = dense(params["router"], x.astype(jnp.float32), cfg)  # (B,T,E)
+    logits = dense(
+        params["router"], x.astype(jnp.float32), cfg,
+        site="ffn.router", layer=layer,
+    )  # (B,T,E)
     gates = jax.nn.softmax(logits, axis=-1)
     topv, topi = jax.lax.top_k(gates, k)
     topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
@@ -99,7 +109,7 @@ def moe(params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
     out = jnp.einsum("btec,becd->btd", combine.astype(x.dtype), out_e)
 
     if cfg.num_shared_experts:
-        out = out + mlp(params["shared"], x, cfg)
+        out = out + mlp(params["shared"], x, cfg, layer=layer, site="ffn.shared")
 
     # Load-balancing aux loss (Switch-style): E * sum_e f_e * p_e.
     frac = jnp.mean(

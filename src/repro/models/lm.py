@@ -75,42 +75,56 @@ def lm_def(cfg: ModelConfig) -> Dict[str, Any]:
 # ---------------------------------------------------------------------------
 # Blocks (training / full-sequence forward)
 # ---------------------------------------------------------------------------
-def self_block(params, x, cfg: ModelConfig, positions) -> Tuple[jax.Array, jax.Array]:
+def self_block(params, x, cfg: ModelConfig, positions, layer=None) -> Tuple[jax.Array, jax.Array]:
     h = cm.rmsnorm(params["ln1"], x, cfg.norm_eps)
     if cfg.mla:
-        a = attn.mla_attention(params["attn"], h, cfg, positions=positions)
+        a = attn.mla_attention(params["attn"], h, cfg, positions=positions, layer=layer)
     else:
-        a = attn.gqa_attention(params["attn"], h, cfg, positions=positions)
+        a = attn.gqa_attention(params["attn"], h, cfg, positions=positions, layer=layer)
     x = x + a
     x = cm.with_logical(x, ("batch", "seq_sp", None))
     h = cm.rmsnorm(params["ln2"], x, cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
     if "router" in params["ffn"]:
-        f, aux = ffn.moe(params["ffn"], h, cfg)
+        f, aux = ffn.moe(params["ffn"], h, cfg, layer=layer)
     else:
-        f = ffn.mlp(params["ffn"], h, cfg)
+        f = ffn.mlp(params["ffn"], h, cfg, layer=layer)
     x = x + f
     x = cm.with_logical(x, ("batch", "seq_sp", None))
     return x, aux
 
 
-def cross_block(params, x, memory_kv, cfg: ModelConfig) -> jax.Array:
+def cross_block(params, x, memory_kv, cfg: ModelConfig, layer=None) -> jax.Array:
     h = cm.rmsnorm(params["ln1"], x, cfg.norm_eps)
-    x = x + attn.cross_attention(params["attn"], h, memory_kv, cfg, gated=True)
+    x = x + attn.cross_attention(
+        params["attn"], h, memory_kv, cfg, gated=True, layer=layer
+    )
     h = cm.rmsnorm(params["ln2"], x, cfg.norm_eps)
-    x = x + jnp.tanh(params["gate_ffn"].astype(x.dtype)) * ffn.mlp(params["ffn"], h, cfg)
+    x = x + jnp.tanh(params["gate_ffn"].astype(x.dtype)) * ffn.mlp(
+        params["ffn"], h, cfg, layer=layer
+    )
     return cm.with_logical(x, ("batch", "seq_sp", None))
 
 
-def _scan_blocks(body, x, stacked, cfg: ModelConfig, *extra):
+def _stack_len(stacked) -> int:
+    return jax.tree.leaves(stacked)[0].shape[0]
+
+
+def _scan_blocks(body, x, stacked, cfg: ModelConfig, *extra, base=0):
+    """Scan ``body(layer_params, layer_idx, x, *extra)`` over a stacked
+    layer tree.  The layer index rides the scan xs (``base`` offsets it
+    past unscanned blocks) and feeds the photonic engine's site-folded
+    noise streams, so same-shaped layers decorrelate (DESIGN.md §9)."""
     body = cm.apply_remat(body, cfg)
 
-    def step(carry, layer_params):
+    def step(carry, inp):
+        layer_params, idx = inp
         x, aux = carry
-        x, a = body(layer_params, x, *extra)
+        x, a = body(layer_params, idx, x, *extra)
         return (x, aux + a), None
 
-    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)), stacked)
+    idxs = base + jnp.arange(_stack_len(stacked))
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)), (stacked, idxs))
     return x, aux
 
 
@@ -124,9 +138,11 @@ def lm_logits(params, tokens, cfg: ModelConfig, vision: Optional[jax.Array] = No
     positions = jnp.arange(t)
     aux = jnp.zeros((), jnp.float32)
 
+    base = 0
     if cfg.mla and cfg.num_experts:
-        x, a = self_block(params["first_block"], x, cfg, positions)
+        x, a = self_block(params["first_block"], x, cfg, positions, layer=0)
         aux += a
+        base = 1
 
     if cfg.cross_attn_every:
         # groups of (cross_attn_every - 1) self layers + 1 cross layer
@@ -138,31 +154,36 @@ def lm_logits(params, tokens, cfg: ModelConfig, vision: Optional[jax.Array] = No
         # Per-group cross params differ -> compute kv inside the group body.
         def group(carry, inp):
             x, aux = carry
-            selfs, crossp = inp
-            def body(p, x, pos):
-                return self_block(p, x, cfg, pos)
-            x, a = _scan_blocks(body, x, selfs, cfg, positions)
-            kv = attn.cross_kv(crossp["attn"], vision, cfg)
-            cb = cm.apply_remat(lambda p, x, k: cross_block(p, x, k, cfg), cfg)
-            x = cb(crossp, x, kv)
+            selfs, crossp, g = inp
+            def body(p, idx, x, pos):
+                return self_block(p, x, cfg, pos, layer=idx)
+            x, a = _scan_blocks(body, x, selfs, cfg, positions, base=base + g * per)
+            # Cross blocks fold in a range disjoint from the self-layer
+            # indices, so same-site GEMMs never share a noise stream.
+            cg = cfg.num_layers + g
+            kv = attn.cross_kv(crossp["attn"], vision, cfg, layer=cg)
+            cb = cm.apply_remat(
+                lambda p, x, k, g: cross_block(p, x, k, cfg, layer=g), cfg
+            )
+            x = cb(crossp, x, kv, cg)
             return (x, aux + a), None
 
         (x, aux2), _ = jax.lax.scan(
-            group, (x, aux), (self_stack, params["cross"])
+            group, (x, aux), (self_stack, params["cross"], jnp.arange(n_groups))
         )
         aux = aux2
     else:
-        def body(p, x, pos):
-            return self_block(p, x, cfg, pos)
+        def body(p, idx, x, pos):
+            return self_block(p, x, cfg, pos, layer=idx)
 
-        x, a = _scan_blocks(body, x, params["layers"], cfg, positions)
+        x, a = _scan_blocks(body, x, params["layers"], cfg, positions, base=base)
         aux += a
 
     x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if cfg.tie_embeddings:
         logits = cm.unembed(params["embed"], x, cfg)
     else:
-        logits = cm.dense(params["lm_head"], x, cfg)
+        logits = cm.dense(params["lm_head"], x, cfg, site="lm_head")
     return logits, aux
 
 
@@ -177,34 +198,38 @@ def lm_loss(params, batch: Dict[str, jax.Array], cfg: ModelConfig) -> jax.Array:
 # ---------------------------------------------------------------------------
 # Serving: prefill + decode with per-layer caches
 # ---------------------------------------------------------------------------
-def _layer_prefill(p, x, cfg, positions, max_seq):
+def _layer_prefill(p, x, cfg, positions, max_seq, layer=None):
     h = cm.rmsnorm(p["ln1"], x, cfg.norm_eps)
     if cfg.mla:
-        a, cache = attn.mla_prefill(p["attn"], h, cfg, positions=positions, max_seq=max_seq)
+        a, cache = attn.mla_prefill(
+            p["attn"], h, cfg, positions=positions, max_seq=max_seq, layer=layer
+        )
     else:
-        a, cache = attn.gqa_prefill(p["attn"], h, cfg, positions=positions, max_seq=max_seq)
+        a, cache = attn.gqa_prefill(
+            p["attn"], h, cfg, positions=positions, max_seq=max_seq, layer=layer
+        )
     x = x + a
     h = cm.rmsnorm(p["ln2"], x, cfg.norm_eps)
     if "router" in p["ffn"]:
-        f, _ = ffn.moe(p["ffn"], h, cfg)
+        f, _ = ffn.moe(p["ffn"], h, cfg, layer=layer)
     else:
-        f = ffn.mlp(p["ffn"], h, cfg)
+        f = ffn.mlp(p["ffn"], h, cfg, layer=layer)
     x = x + f
     return cm.with_logical(x, ("batch", "seq_sp", None)), cache
 
 
-def _layer_decode(p, x, cache, pos, cfg):
+def _layer_decode(p, x, cache, pos, cfg, layer=None):
     h = cm.rmsnorm(p["ln1"], x, cfg.norm_eps)
     if cfg.mla:
-        a, cache = attn.mla_decode(p["attn"], h, cache, pos, cfg)
+        a, cache = attn.mla_decode(p["attn"], h, cache, pos, cfg, layer=layer)
     else:
-        a, cache = attn.gqa_decode(p["attn"], h, cache, pos, cfg)
+        a, cache = attn.gqa_decode(p["attn"], h, cache, pos, cfg, layer=layer)
     x = x + a
     h = cm.rmsnorm(p["ln2"], x, cfg.norm_eps)
     if "router" in p["ffn"]:
-        f, _ = ffn.moe(p["ffn"], h, cfg)
+        f, _ = ffn.moe(p["ffn"], h, cfg, layer=layer)
     else:
-        f = ffn.mlp(p["ffn"], h, cfg)
+        f = ffn.mlp(p["ffn"], h, cfg, layer=layer)
     return x + f, cache
 
 
@@ -221,9 +246,11 @@ def lm_prefill(
     positions = jnp.arange(t)
     caches = {}
 
+    base = 0
     if cfg.mla and cfg.num_experts:
-        x, c0 = _layer_prefill(params["first_block"], x, cfg, positions, max_seq)
+        x, c0 = _layer_prefill(params["first_block"], x, cfg, positions, max_seq, layer=0)
         caches["first"] = c0
+        base = 1
 
     if cfg.cross_attn_every:
         per = cfg.cross_attn_every - 1
@@ -233,19 +260,21 @@ def lm_prefill(
         )
 
         def group(x, inp):
-            selfs, crossp = inp
+            selfs, crossp, g = inp
 
-            def body(x, p):
-                x, c = _layer_prefill(p, x, cfg, positions, max_seq)
+            def body(x, pi):
+                p, idx = pi
+                x, c = _layer_prefill(p, x, cfg, positions, max_seq, layer=idx)
                 return x, c
 
-            x, cs = jax.lax.scan(body, x, selfs)
-            kv = attn.cross_kv(crossp["attn"], vision, cfg)
-            x = cross_block(crossp, x, kv, cfg)
+            x, cs = jax.lax.scan(body, x, (selfs, base + g * per + jnp.arange(per)))
+            cg = cfg.num_layers + g
+            kv = attn.cross_kv(crossp["attn"], vision, cfg, layer=cg)
+            x = cross_block(crossp, x, kv, cfg, layer=cg)
             return x, (cs, kv)
 
         x, (self_caches, cross_kvs) = jax.lax.scan(
-            group, x, (self_stack, params["cross"])
+            group, x, (self_stack, params["cross"], jnp.arange(n_groups))
         )
         # (groups, per, ...) -> flat (layers, ...)
         caches["layers"] = jax.tree.map(
@@ -253,18 +282,22 @@ def lm_prefill(
         )
         caches["cross_kv"] = cross_kvs
     else:
-        def body(x, p):
-            x, c = _layer_prefill(p, x, cfg, positions, max_seq)
+        def body(x, pi):
+            p, idx = pi
+            x, c = _layer_prefill(p, x, cfg, positions, max_seq, layer=idx)
             return x, c
 
-        x, layer_caches = jax.lax.scan(body, x, params["layers"])
+        n = jax.tree.leaves(params["layers"])[0].shape[0]
+        x, layer_caches = jax.lax.scan(
+            body, x, (params["layers"], base + jnp.arange(n))
+        )
         caches["layers"] = layer_caches
 
     x = cm.rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
     logits = (
         cm.unembed(params["embed"], x, cfg)
         if cfg.tie_embeddings
-        else cm.dense(params["lm_head"], x, cfg)
+        else cm.dense(params["lm_head"], x, cfg, site="lm_head")
     )
     caches["pos"] = jnp.array(t, jnp.int32)
     return logits, caches
@@ -275,9 +308,11 @@ def lm_decode(params, token: jax.Array, caches, cfg: ModelConfig):
     pos = caches["pos"]
     x = cm.embed(params["embed"], token, cfg)
 
+    base = 0
     if cfg.mla and cfg.num_experts:
-        x, c0 = _layer_decode(params["first_block"], x, caches["first"], pos, cfg)
+        x, c0 = _layer_decode(params["first_block"], x, caches["first"], pos, cfg, layer=0)
         caches = {**caches, "first": c0}
+        base = 1
 
     if cfg.cross_attn_every:
         per = cfg.cross_attn_every - 1
@@ -290,19 +325,29 @@ def lm_decode(params, token: jax.Array, caches, cfg: ModelConfig):
         )
 
         def group(x, inp):
-            selfs, cs, crossp, kv = inp
+            selfs, cs, crossp, kv, g = inp
 
-            def body(x, pc):
-                p, c = pc
-                x, c = _layer_decode(p, x, c, pos, cfg)
+            def body(x, pci):
+                p, c, idx = pci
+                x, c = _layer_decode(p, x, c, pos, cfg, layer=idx)
                 return x, c
 
-            x, cs = jax.lax.scan(body, x, (selfs, cs))
-            x = cross_block(crossp, x, kv, cfg)
+            x, cs = jax.lax.scan(
+                body, x, (selfs, cs, base + g * per + jnp.arange(per))
+            )
+            x = cross_block(crossp, x, kv, cfg, layer=cfg.num_layers + g)
             return x, cs
 
         x, new_caches = jax.lax.scan(
-            group, x, (self_stack, cache_stack, params["cross"], caches["cross_kv"])
+            group,
+            x,
+            (
+                self_stack,
+                cache_stack,
+                params["cross"],
+                caches["cross_kv"],
+                jnp.arange(n_groups),
+            ),
         )
         caches = {
             **caches,
@@ -311,19 +356,22 @@ def lm_decode(params, token: jax.Array, caches, cfg: ModelConfig):
             ),
         }
     else:
-        def body(x, pc):
-            p, c = pc
-            x, c = _layer_decode(p, x, c, pos, cfg)
+        def body(x, pci):
+            p, c, idx = pci
+            x, c = _layer_decode(p, x, c, pos, cfg, layer=idx)
             return x, c
 
-        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches["layers"]))
+        n = jax.tree.leaves(params["layers"])[0].shape[0]
+        x, new_caches = jax.lax.scan(
+            body, x, (params["layers"], caches["layers"], base + jnp.arange(n))
+        )
         caches = {**caches, "layers": new_caches}
 
     x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = (
         cm.unembed(params["embed"], x, cfg)
         if cfg.tie_embeddings
-        else cm.dense(params["lm_head"], x, cfg)
+        else cm.dense(params["lm_head"], x, cfg, site="lm_head")
     )
     caches = {**caches, "pos": pos + 1}
     return logits, caches

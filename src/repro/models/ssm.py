@@ -49,7 +49,7 @@ def mamba_def(cfg: ModelConfig) -> Dict[str, Any]:
 
 def _split_in(params, x, cfg: ModelConfig):
     inner, st, h = _inner(cfg), cfg.ssm_state_size, _nheads(cfg)
-    u = dense(params["in_proj"], x, cfg)
+    u = dense(params["in_proj"], x, cfg, site="in_proj")
     z = u[..., :inner]
     xbc = u[..., inner : 2 * inner + 2 * st]
     dt = u[..., 2 * inner + 2 * st :]
@@ -149,7 +149,7 @@ def mamba_block(
     y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xi.astype(jnp.float32)
     y = y.reshape(*x.shape[:2], inner).astype(x.dtype)
     y = cm.rmsnorm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
-    out = dense(params["out_proj"], y, cfg)
+    out = dense(params["out_proj"], y, cfg, site="out_proj")
     return res + out
 
 
@@ -182,7 +182,7 @@ def mamba_prefill(
     y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xi.astype(jnp.float32)
     y = y.reshape(*x.shape[:2], inner).astype(x.dtype)
     y = cm.rmsnorm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
-    out = dense(params["out_proj"], y, cfg)
+    out = dense(params["out_proj"], y, cfg, site="out_proj")
     return res + out, {"ssm": s, "conv": conv_state}
 
 
@@ -214,7 +214,7 @@ def mamba_decode(
     y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xi
     y = y.reshape(-1, 1, inner).astype(x.dtype)
     y = cm.rmsnorm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
-    out = dense(params["out_proj"], y, cfg)
+    out = dense(params["out_proj"], y, cfg, site="out_proj")
     return res + out, {"ssm": s, "conv": new_conv}
 
 

@@ -98,7 +98,7 @@ def whisper_logits(params, batch, cfg: ModelConfig):
 
     x, _ = jax.lax.scan(step, x, params["dec_layers"])
     x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    return cm.dense(params["lm_head"], x, cfg), jnp.zeros((), jnp.float32)
+    return cm.dense(params["lm_head"], x, cfg, site="lm_head"), jnp.zeros((), jnp.float32)
 
 
 def whisper_loss(params, batch, cfg: ModelConfig):
@@ -127,7 +127,7 @@ def whisper_prefill(params, batch, cfg: ModelConfig, max_seq: int):
 
     x, (self_caches, cross_kvs) = jax.lax.scan(step, x, params["dec_layers"])
     x = cm.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
-    logits = cm.dense(params["lm_head"], x, cfg)
+    logits = cm.dense(params["lm_head"], x, cfg, site="lm_head")
     cache = {
         "self": self_caches,
         "cross": cross_kvs,
@@ -153,7 +153,7 @@ def whisper_decode(params, token, cache, cfg: ModelConfig):
 
     x, new_self = jax.lax.scan(step, x, (params["dec_layers"], cache["self"], cache["cross"]))
     x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = cm.dense(params["lm_head"], x, cfg)
+    logits = cm.dense(params["lm_head"], x, cfg, site="lm_head")
     return logits, {**cache, "self": new_self, "pos": pos + 1}
 
 

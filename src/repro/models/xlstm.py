@@ -125,30 +125,30 @@ def _mlstm_chunked(
 def _mlstm_qkv_gates(params, xin, cfg: ModelConfig):
     b, t, _ = xin.shape
     h, dh = cfg.num_heads, _dh(cfg)
-    q = dense(params["wq"], xin, cfg).reshape(b, t, h, dh)
-    k = dense(params["wk"], xin, cfg).reshape(b, t, h, dh)
-    v = dense(params["wv"], xin, cfg).reshape(b, t, h, dh)
-    li = dense(params["wi"], xin, cfg).astype(jnp.float32)         # (B,T,H)
-    lf = jax.nn.log_sigmoid(dense(params["wf"], xin, cfg).astype(jnp.float32))
+    q = dense(params["wq"], xin, cfg, site="wq").reshape(b, t, h, dh)
+    k = dense(params["wk"], xin, cfg, site="wk").reshape(b, t, h, dh)
+    v = dense(params["wv"], xin, cfg, site="wv").reshape(b, t, h, dh)
+    li = dense(params["wi"], xin, cfg, site="wi").astype(jnp.float32)         # (B,T,H)
+    lf = jax.nn.log_sigmoid(dense(params["wf"], xin, cfg, site="wf").astype(jnp.float32))
     return q, k, v, li, lf
 
 
 def mlstm_block(params, x, cfg: ModelConfig) -> jax.Array:
     res = x
     xn = cm.rmsnorm(params["ln"], x, cfg.norm_eps)
-    u = dense(params["up"], xn, cfg)
+    u = dense(params["up"], xn, cfg, site="up")
     xin, gate = jnp.split(u, 2, axis=-1)
     q, k, v, li, lf = _mlstm_qkv_gates(params, xin, cfg)
     hs, _ = _mlstm_chunked(q, k, v, li, lf, cfg.ssm_chunk, unroll=cfg.unroll_scans)
     hs = hs.reshape(*x.shape[:2], -1).astype(x.dtype)
     y = cm.rmsnorm(params["out_norm"], hs, cfg.norm_eps) * jax.nn.silu(gate)
-    return res + dense(params["down"], y, cfg)
+    return res + dense(params["down"], y, cfg, site="down")
 
 
 def mlstm_prefill(params, x, cfg: ModelConfig):
     res = x
     xn = cm.rmsnorm(params["ln"], x, cfg.norm_eps)
-    u = dense(params["up"], xn, cfg)
+    u = dense(params["up"], xn, cfg, site="up")
     xin, gate = jnp.split(u, 2, axis=-1)
     q, k, v, li, lf = _mlstm_qkv_gates(params, xin, cfg)
     hs, (c, n, m) = _mlstm_chunked(
@@ -156,7 +156,7 @@ def mlstm_prefill(params, x, cfg: ModelConfig):
     )
     hs = hs.reshape(*x.shape[:2], -1).astype(x.dtype)
     y = cm.rmsnorm(params["out_norm"], hs, cfg.norm_eps) * jax.nn.silu(gate)
-    return res + dense(params["down"], y, cfg), {"C": c, "n": n, "m": m}
+    return res + dense(params["down"], y, cfg, site="down"), {"C": c, "n": n, "m": m}
 
 
 def mlstm_decode(params, x, state, cfg: ModelConfig):
@@ -164,7 +164,7 @@ def mlstm_decode(params, x, state, cfg: ModelConfig):
     res = x
     h, dh = cfg.num_heads, _dh(cfg)
     xn = cm.rmsnorm(params["ln"], x, cfg.norm_eps)
-    u = dense(params["up"], xn, cfg)
+    u = dense(params["up"], xn, cfg, site="up")
     xin, gate = jnp.split(u, 2, axis=-1)
     q, k, v, li, lf = _mlstm_qkv_gates(params, xin, cfg)
     q1 = q[:, 0].astype(jnp.float32) * (dh ** -0.5)  # (B,H,dh)
@@ -182,7 +182,7 @@ def mlstm_decode(params, x, state, cfg: ModelConfig):
     den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n_t)), jnp.exp(-m_t))
     hout = (num / den[..., None]).reshape(x.shape[0], 1, -1).astype(x.dtype)
     y = cm.rmsnorm(params["out_norm"], hout, cfg.norm_eps) * jax.nn.silu(gate)
-    return res + dense(params["down"], y, cfg), {"C": c_t, "n": n_t, "m": m_t}
+    return res + dense(params["down"], y, cfg, site="down"), {"C": c_t, "n": n_t, "m": m_t}
 
 
 # ---------------------------------------------------------------------------
@@ -233,34 +233,34 @@ def _slstm_init_state(b, d):
 def slstm_block(params, x, cfg: ModelConfig) -> jax.Array:
     res = x
     xn = cm.rmsnorm(params["ln"], x, cfg.norm_eps)
-    gx = dense(params["wx"], xn, cfg)
+    gx = dense(params["wx"], xn, cfg, site="wx")
     hs, _ = _slstm_scan(params, gx, cfg, _slstm_init_state(x.shape[0], cfg.d_model))
     hs = hs.astype(x.dtype)
     y = cm.rmsnorm(params["out_norm"], hs, cfg.norm_eps)
-    return res + dense(params["down"], y, cfg)
+    return res + dense(params["down"], y, cfg, site="down")
 
 
 def slstm_prefill(params, x, cfg: ModelConfig):
     res = x
     xn = cm.rmsnorm(params["ln"], x, cfg.norm_eps)
-    gx = dense(params["wx"], xn, cfg)
+    gx = dense(params["wx"], xn, cfg, site="wx")
     hs, (c, n, m, h) = _slstm_scan(
         params, gx, cfg, _slstm_init_state(x.shape[0], cfg.d_model)
     )
     hs = hs.astype(x.dtype)
     y = cm.rmsnorm(params["out_norm"], hs, cfg.norm_eps)
-    return res + dense(params["down"], y, cfg), {"c": c, "n": n, "m": m, "h": h}
+    return res + dense(params["down"], y, cfg, site="down"), {"c": c, "n": n, "m": m, "h": h}
 
 
 def slstm_decode(params, x, state, cfg: ModelConfig):
     res = x
     xn = cm.rmsnorm(params["ln"], x, cfg.norm_eps)
-    gx = dense(params["wx"], xn, cfg)
+    gx = dense(params["wx"], xn, cfg, site="wx")
     st = (state["c"], state["n"], state["m"], state["h"])
     hs, (c, n, m, h) = _slstm_scan(params, gx, cfg, st)
     hs = hs.astype(x.dtype)
     y = cm.rmsnorm(params["out_norm"], hs, cfg.norm_eps)
-    return res + dense(params["down"], y, cfg), {"c": c, "n": n, "m": m, "h": h}
+    return res + dense(params["down"], y, cfg, site="down"), {"c": c, "n": n, "m": m, "h": h}
 
 
 # ---------------------------------------------------------------------------
@@ -332,7 +332,7 @@ def xlstm_logits(params, tokens, cfg: ModelConfig):
     x = cm.with_logical(x, ("batch", None, None))
     x, _ = _xlstm_body(params, x, cfg, "full")
     x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    return cm.dense(params["lm_head"], x, cfg), jnp.zeros((), jnp.float32)
+    return cm.dense(params["lm_head"], x, cfg, site="lm_head"), jnp.zeros((), jnp.float32)
 
 
 def xlstm_loss(params, batch, cfg: ModelConfig):
@@ -345,7 +345,7 @@ def xlstm_prefill(params, tokens, cfg: ModelConfig, max_seq: int = 0):
     x, sts = _xlstm_body(params, x, cfg, "prefill")
     msts, ssts = sts
     x = cm.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
-    logits = cm.dense(params["lm_head"], x, cfg)
+    logits = cm.dense(params["lm_head"], x, cfg, site="lm_head")
     cache = {"mlstm": msts, "slstm": ssts, "pos": jnp.array(tokens.shape[1], jnp.int32)}
     return logits, cache
 
@@ -355,7 +355,7 @@ def xlstm_decode(params, token, cache, cfg: ModelConfig):
     x, sts = _xlstm_body(params, x, cfg, "decode", states=cache)
     msts, ssts = sts
     x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = cm.dense(params["lm_head"], x, cfg)
+    logits = cm.dense(params["lm_head"], x, cfg, site="lm_head")
     return logits, {"mlstm": msts, "slstm": ssts, "pos": cache["pos"] + 1}
 
 

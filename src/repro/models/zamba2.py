@@ -70,7 +70,7 @@ def zamba2_logits(params, tokens, cfg: ModelConfig):
 
     x, _ = jax.lax.scan(group, x, params["mamba"])
     x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    return cm.dense(params["lm_head"], x, cfg), jnp.zeros((), jnp.float32)
+    return cm.dense(params["lm_head"], x, cfg, site="lm_head"), jnp.zeros((), jnp.float32)
 
 
 def zamba2_loss(params, batch, cfg: ModelConfig):
@@ -98,7 +98,7 @@ def zamba2_prefill(params, tokens, cfg: ModelConfig, max_seq: int):
 
     x, (mamba_states, attn_caches) = jax.lax.scan(group, x, params["mamba"])
     x = cm.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
-    logits = cm.dense(params["lm_head"], x, cfg)
+    logits = cm.dense(params["lm_head"], x, cfg, site="lm_head")
     cache = {
         "mamba": mamba_states,
         "attn": attn_caches,
@@ -131,7 +131,7 @@ def zamba2_decode(params, token, cache, cfg: ModelConfig):
         group, x, (params["mamba"], cache["mamba"], cache["attn"])
     )
     x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = cm.dense(params["lm_head"], x, cfg)
+    logits = cm.dense(params["lm_head"], x, cfg, site="lm_head")
     return logits, {
         "mamba": mamba_states,
         "attn": attn_caches,

@@ -1,0 +1,28 @@
+"""`repro.photonic` — the weight-stationary photonic execution engine.
+
+One subsystem owns "which GEMMs run on the photonic DPU, and how":
+
+* :class:`~repro.photonic.engine.PhotonicEngine` — frozen operating point
+  (DPUConfig + backend + per-site routing policy + site-folded seed
+  derivation).  Every photonic GEMM in the repo dispatches through it.
+* :mod:`~repro.photonic.packing` — one-time weight prepacking
+  (:func:`prepack_params`): per-column int8 quantization + per-backend
+  layout (tile-padded for Pallas) producing :class:`PackedDense` leaves
+  the engine consumes without re-quantizing the static operand.
+
+The paper's DPUs are weight-stationary (weight MRRs are programmed once
+per tile, inputs stream at the symbol rate); prepacking is the software
+image of that: quantize/pack the weight once, stream activations through.
+"""
+
+from repro.photonic.engine import PhotonicEngine, SitePolicy, engine_for
+from repro.photonic.packing import PackedDense, pack_dense, prepack_params
+
+__all__ = [
+    "PhotonicEngine",
+    "SitePolicy",
+    "PackedDense",
+    "engine_for",
+    "pack_dense",
+    "prepack_params",
+]

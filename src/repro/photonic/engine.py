@@ -1,0 +1,444 @@
+"""The photonic execution engine: one dispatcher for every DPU GEMM.
+
+The paper's DPUs are *weight-stationary*: weight MRRs are programmed once
+per tile, then inputs stream through at the symbol rate (crossbar MRR
+accelerators program weights into ring banks, arXiv:2401.16072; the
+bit-sliced integer representation that makes the weight operand
+prepackable is the byte-size integer GEMM decomposition of
+arXiv:2407.06134).  :class:`PhotonicEngine` is the software image of that
+operating point:
+
+* a :class:`~repro.core.dpu.DPUConfig` (organization, precision, rate,
+  analog channel),
+* a backend (``ref`` oracle / ``pallas`` TPU kernel / ``exact`` upper
+  bound),
+* a :class:`SitePolicy` deciding which *named GEMM sites* ("attn.wq",
+  "ffn.wi", "lm_head", ...) execute photonically — expert-routing
+  projections ("router") stay digital by default,
+* deterministic site-folded seed derivation, so same-shaped GEMMs at
+  different sites (or different layers of a scanned stack) draw
+  decorrelated noise from one ``noise_seed``/``prng_key``.
+
+Contracts (DESIGN.md §8/§9): with an ideal channel every backend is
+bit-identical to :func:`~repro.kernels.photonic_gemm.ref.exact_int_gemm`;
+deterministic analog stages are bitwise across backends; noisy calls need
+``prng_key`` or ``DPUConfig.noise_seed`` (same source + same site/fold =>
+bitwise-equal).  ``site=None, fold=None`` reproduces the legacy
+pre-engine seed derivation bit-for-bit, which is what keeps
+``repro.kernels.photonic_gemm.ops`` a thin compatibility wrapper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dpu import DPUConfig, quantize_symmetric
+from repro.kernels.photonic_gemm.kernel import photonic_gemm_pallas
+from repro.kernels.photonic_gemm.ref import exact_int_gemm, photonic_gemm_ref
+from repro.noise.stages import (
+    data_tweak,
+    fold_seed,
+    key_zero_cotangent,
+    seed_from_key,
+)
+
+BACKENDS = ("ref", "pallas", "exact")
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def site_hash(site: str) -> int:
+    """Stable 32-bit FNV-1a of a site name (process-independent)."""
+    h = 2166136261
+    for ch in site.encode():
+        h = (h ^ ch) * 16777619 & 0xFFFFFFFF
+    return h
+
+
+def pallas_tiling(cfg: DPUConfig, k: int, c: int) -> Tuple[int, int, int]:
+    """Static Pallas tiling ``(n_chunk, tile_k, tile_c)`` for a (K, C) weight.
+
+    Depends only on the config and the weight shape — never on the
+    activations — which is what makes the padded weight layout prepackable
+    (:mod:`repro.photonic.packing`).  Matches the historical
+    ``photonic_gemm_int`` tile selection bit-for-bit.
+    """
+    channel = cfg.effective_channel()
+    analog = channel is not None and channel.analog
+    adc_bits = channel.adc_bits if channel is not None else cfg.adc_bits
+    if adc_bits is None and not analog:
+        # Chunking numerically irrelevant -> MXU-aligned tiles.
+        tile_k = 512 if k >= 512 else _round_up(max(k, 128), 128)
+        n_chunk = min(128, tile_k)
+    else:
+        # DPU-faithful chunking at the achievable DPE size N.
+        n = cfg.n
+        n_chunk = n
+        tile_k = n * max(1, 512 // n)
+    tile_c = min(128, _round_up(c, 128))
+    return n_chunk, tile_k, tile_c
+
+
+@dataclasses.dataclass(frozen=True)
+class SitePolicy:
+    """Which named GEMM sites execute on the photonic DPU.
+
+    Patterns are matched (``fnmatch``-style) against the full dotted site
+    name ("ffn.router") *and* its final component ("router"), so
+    leaf-level patterns compose across models.  A ``None`` site (caller
+    did not name the GEMM) always routes — backward compatible with the
+    pre-engine behavior.
+
+    The default excludes ``router``: MoE expert-routing decisions are
+    control flow, not bulk compute, and a noisy analog channel would
+    perturb top-k selection; opt it in with ``exclude=()`` (or
+    ``ModelConfig.photonic_exclude=()``).
+    """
+
+    include: Tuple[str, ...] = ("*",)
+    exclude: Tuple[str, ...] = ("router",)
+
+    def routes(self, site: Optional[str]) -> bool:
+        if site is None:
+            return True
+        return self._match(self.include, site) and not self._match(
+            self.exclude, site
+        )
+
+    @staticmethod
+    def _match(patterns: Tuple[str, ...], site: str) -> bool:
+        leaf = site.rsplit(".", 1)[-1]
+        return any(
+            fnmatch.fnmatchcase(site, p) or fnmatch.fnmatchcase(leaf, p)
+            for p in patterns
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class PhotonicEngine:
+    """Frozen photonic operating point + routing policy (hashable, so it
+    can ride through ``jit`` closures and ``custom_vjp`` static args)."""
+
+    dpu: DPUConfig = DPUConfig()
+    backend: str = "ref"
+    policy: SitePolicy = SitePolicy()
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown photonic backend {self.backend!r}; expected one of "
+                f"{BACKENDS}"
+            )
+
+    # -- policy --------------------------------------------------------------
+    def routes(self, site: Optional[str]) -> bool:
+        return self.policy.routes(site)
+
+    def describe(self) -> str:
+        d = self.dpu
+        ch = d.effective_channel()
+        return (
+            f"{self.backend} backend, {d.organization} B={d.bits} "
+            f"N={d.n} @ {d.datarate_gs} GS/s, "
+            f"channel={'analog' if ch is not None and ch.analog else 'ideal'}, "
+            f"sites include={list(self.policy.include)} "
+            f"exclude={list(self.policy.exclude)}"
+        )
+
+    # -- seed derivation -----------------------------------------------------
+    def stream_seed(
+        self,
+        site: Optional[str],
+        fold,
+        prng_key: Optional[jax.Array],
+        xq: jax.Array,
+        wq: jax.Array,
+    ) -> jax.Array:
+        """uint32 noise-stream seed for one GEMM call.
+
+        Precedence matches :meth:`DPUConfig.noise_seed_array` (explicit
+        ``prng_key`` wins over ``noise_seed``; neither => the documented
+        ``ValueError``).  The site name and an optional traced ``fold``
+        index (e.g. the layer counter of a ``lax.scan`` stack) are folded
+        in *before* the operand-content tweak, so same-shaped, same-seed
+        GEMMs at different sites/layers decorrelate even when their
+        operand contents coincide.  ``site=None, fold=None`` is bitwise
+        the legacy derivation.
+        """
+        if prng_key is not None:
+            key = prng_key
+            if site is not None:
+                key = jax.random.fold_in(key, site_hash(site) & 0x7FFFFFFF)
+            if fold is not None:
+                key = jax.random.fold_in(key, fold)
+            seed = seed_from_key(key)
+        else:
+            seed = self.dpu.noise_seed_array(None)
+            if site is not None:
+                seed = fold_seed(seed, jnp.uint32(site_hash(site)))
+            if fold is not None:
+                seed = fold_seed(seed, fold)
+        # Operand-content tweak (zero-padding is hash-neutral, so padded
+        # prepacked weights derive the same stream as per-call operands).
+        return data_tweak(seed, xq, wq)
+
+    # -- integer datapath (single implementation for every caller) -----------
+    def int_gemm(
+        self,
+        xq: jax.Array,  # (R, K) int — quantized inputs
+        wq: jax.Array,  # (K, C) int, or (Kp, Cp) prepacked tile-padded
+        *,
+        site: Optional[str] = None,
+        fold=None,
+        prng_key: Optional[jax.Array] = None,
+        logical_kc: Optional[Tuple[int, int]] = None,
+        tiling: Optional[Tuple[int, int, int]] = None,
+        interpret: Optional[bool] = None,
+        tile_r: int = 128,
+        tile_c: int = 128,
+    ) -> jax.Array:
+        """Integer GEMM through the DPU datapath; int32 (R, C).
+
+        ``logical_kc``/``tiling`` describe a prepacked, tile-padded weight
+        (see :class:`repro.photonic.packing.PackedDense`); without them
+        the weight is taken at face value and padded per call.
+        """
+        k, c = logical_kc if logical_kc is not None else wq.shape[-2:]
+        if self.backend == "exact":
+            return exact_int_gemm(xq, wq[:k, :c])
+
+        cfg = self.dpu
+        channel = cfg.effective_channel()
+        analog = channel is not None and channel.analog
+        adc_bits = channel.adc_bits if channel is not None else cfg.adc_bits
+        noisy = analog and channel.detector_sigma_lsb > 0.0
+        seed = (
+            self.stream_seed(site, fold, prng_key, xq, wq) if noisy else None
+        )
+
+        if self.backend == "ref":
+            return photonic_gemm_ref(
+                xq,
+                wq[:k, :c],
+                slice_bits=cfg.bits,
+                num_slices=cfg.num_slices,
+                n_chunk=cfg.n,
+                adc_bits=adc_bits,
+                channel=channel,
+                seed=seed,
+            )
+
+        assert self.backend == "pallas", self.backend
+        if interpret is None:
+            interpret = _on_cpu()
+        r = xq.shape[0]
+        if tiling is not None:
+            n_chunk, tile_k, tc = tiling  # prepacked layout is authoritative
+        else:
+            n_chunk, tile_k, _ = pallas_tiling(cfg, k, c)
+            # Honour the caller's tile_c bound exactly as the legacy entry
+            # point did (values above 128 are legal).
+            tc = min(tile_c, _round_up(c, 128))
+        tr = min(tile_r, _round_up(r, 8))
+        rp, kp, cp = _round_up(r, tr), _round_up(k, tile_k), _round_up(c, tc)
+        xp = jnp.pad(xq, ((0, rp - r), (0, kp - k)))
+        if wq.shape != (kp, cp):
+            wq = jnp.pad(wq[:k, :c], ((0, kp - k), (0, cp - c)))
+        ch = channel
+        out = photonic_gemm_pallas(
+            xp,
+            wq,
+            None if seed is None else seed.astype(jnp.int32).reshape(1),
+            slice_bits=cfg.bits,
+            num_slices=cfg.num_slices,
+            n_chunk=n_chunk,
+            adc_bits=adc_bits,
+            noise_sigma=ch.detector_sigma_lsb if analog else 0.0,
+            filter_alpha=ch.filter_alpha if analog else 0.0,
+            intermod_eps=ch.intermod_eps if analog else 0.0,
+            crossweight_eps=ch.crossweight_eps if analog else 0.0,
+            valid_chunks=-(-k // n_chunk) if noisy else None,
+            tile_r=tr,
+            tile_c=tc,
+            tile_k=tile_k,
+            interpret=interpret,
+        )
+        return out[:r, :c]
+
+    # -- float entry points (STE-differentiable) -----------------------------
+    def matmul_float(
+        self,
+        x: jax.Array,
+        w: jax.Array,
+        *,
+        site: Optional[str] = None,
+        fold=None,
+        prng_key: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Float GEMM, quantizing *both* operands per call (QAT/train path).
+
+        Non-routed sites fall back to the exact digital matmul.
+        """
+        if not self.routes(site):
+            return x @ w.astype(x.dtype)
+        fold = None if fold is None else jnp.asarray(fold, jnp.int32)
+        return _float_matmul((self, site), x, w, fold, prng_key)
+
+    def matmul(
+        self,
+        x: jax.Array,
+        packed,  # PackedDense
+        *,
+        site: Optional[str] = None,
+        fold=None,
+        prng_key: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Float GEMM against a prepacked weight — the weight-stationary
+        hot path: only the activation is quantized per call.
+
+        Non-routed sites execute the dequantized digital matmul.
+        """
+        if not self.routes(site):
+            return x @ packed.dequant().astype(x.dtype)
+        fold = None if fold is None else jnp.asarray(fold, jnp.int32)
+        meta = (self, site, packed.k, packed.c, packed.tiling)
+        return _packed_matmul(meta, x, packed.wq, packed.w_scale, fold, prng_key)
+
+
+def count_weight_round_ops(jaxpr, min_size: int) -> int:
+    """Rounding ops over arrays of >= ``min_size`` elements in a jaxpr,
+    recursing into sub-jaxprs (scan bodies, custom_vjp calls, ...).
+
+    The weight-stationary acceptance check: a decode step over prepacked
+    params must contain ZERO weight-sized rounds — the quantization work
+    provably left the hot path rather than merely getting cheaper.
+    """
+    import numpy as np
+
+    n = 0
+    for eqn in jaxpr.eqns:
+        if "round" in eqn.primitive.name:
+            if any(
+                hasattr(v, "aval")
+                and int(np.prod(v.aval.shape or (1,))) >= min_size
+                for v in eqn.invars
+            ):
+                n += 1
+        for v in eqn.params.values():
+            for sub in jax.tree_util.tree_leaves(
+                v, is_leaf=lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr")
+            ):
+                if hasattr(sub, "eqns"):
+                    n += count_weight_round_ops(sub, min_size)
+                elif hasattr(sub, "jaxpr"):
+                    n += count_weight_round_ops(sub.jaxpr, min_size)
+    return n
+
+
+@functools.lru_cache(maxsize=None)
+def engine_for(
+    dpu: DPUConfig,
+    backend: str,
+    include: Tuple[str, ...] = ("*",),
+    exclude: Tuple[str, ...] = ("router",),
+) -> PhotonicEngine:
+    """Cached engine construction (one frozen engine per operating point,
+    so ``jit`` retraces don't multiply)."""
+    return PhotonicEngine(
+        dpu=dpu, backend=backend, policy=SitePolicy(include, exclude)
+    )
+
+
+# ---------------------------------------------------------------------------
+# STE custom-VJP wrappers (module level: stable identity across jit traces)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _float_matmul(meta, x, w, fold, prng_key):
+    return _float_fwd_impl(meta, x, w, fold, prng_key)
+
+
+def _float_fwd_impl(meta, x, w, fold, prng_key):
+    eng, site = meta
+    lead = x.shape[:-1]
+    xr = x.reshape(-1, x.shape[-1])
+    xq, sx = quantize_symmetric(xr, eng.dpu.operand_bits)
+    wq, sw = quantize_symmetric(w, eng.dpu.operand_bits, axis=0)
+    out = eng.int_gemm(xq, wq, site=site, fold=fold, prng_key=prng_key)
+    y = out.astype(jnp.float32) * sx * sw
+    return y.reshape(*lead, w.shape[1]).astype(x.dtype)
+
+
+def _float_fwd(meta, x, w, fold, prng_key):
+    return _float_fwd_impl(meta, x, w, fold, prng_key), (x, w, fold, prng_key)
+
+
+def _float_bwd(meta, res, g):
+    x, w, fold, prng_key = res
+    g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    dx = (g2 @ w.astype(jnp.float32).T).reshape(x.shape).astype(x.dtype)
+    dw = (x2.T @ g2).astype(w.dtype)
+    return dx, dw, key_zero_cotangent(fold), key_zero_cotangent(prng_key)
+
+
+_float_matmul.defvjp(_float_fwd, _float_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _packed_matmul(meta, x, wq, w_scale, fold, prng_key):
+    return _packed_fwd_impl(meta, x, wq, w_scale, fold, prng_key)
+
+
+def _packed_fwd_impl(meta, x, wq, w_scale, fold, prng_key):
+    eng, site, k, c, tiling = meta
+    lead = x.shape[:-1]
+    xr = x.reshape(-1, x.shape[-1])
+    xq, sx = quantize_symmetric(xr, eng.dpu.operand_bits)
+    out = eng.int_gemm(
+        xq,
+        wq,
+        site=site,
+        fold=fold,
+        prng_key=prng_key,
+        logical_kc=(k, c),
+        tiling=tiling,
+    )
+    y = out.astype(jnp.float32) * sx * w_scale.astype(jnp.float32)[None, :]
+    return y.reshape(*lead, c).astype(x.dtype)
+
+
+def _packed_fwd(meta, x, wq, w_scale, fold, prng_key):
+    y = _packed_fwd_impl(meta, x, wq, w_scale, fold, prng_key)
+    return y, (x, wq, w_scale, fold, prng_key)
+
+
+def _packed_bwd(meta, res, g):
+    _, site, k, c, _ = meta
+    x, wq, w_scale, fold, prng_key = res
+    wf = wq[:k, :c].astype(jnp.float32) * w_scale.astype(jnp.float32)[None, :]
+    g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    dx = (g2 @ wf.T).reshape(x.shape).astype(x.dtype)
+    # Prepacked weights are frozen serving state: int8 slices get the
+    # mandatory float0 cotangent, the scale a plain zero.
+    return (
+        dx,
+        key_zero_cotangent(wq),
+        jnp.zeros_like(w_scale),
+        key_zero_cotangent(fold),
+        key_zero_cotangent(prng_key),
+    )
+
+
+_packed_matmul.defvjp(_packed_fwd, _packed_bwd)

@@ -1,0 +1,166 @@
+"""One-time weight prepacking for the weight-stationary photonic engine.
+
+The DPU programs its weight MRR banks once per tile and then streams
+inputs (paper §III-A); re-quantizing — and, for the Pallas backend,
+re-padding — the *static* weight operand on every forward call is pure
+hot-path waste.  :func:`prepack_params` walks a parameter tree against
+its definition tree, finds every dense site the engine's policy routes,
+and replaces the float (or int8-stored) weight with a
+:class:`PackedDense` leaf:
+
+* per-column symmetric int8 quantization (bit-identical to the per-call
+  ``quantize_symmetric(w, bits, axis=0)`` it replaces — contraction-axis
+  reduction only, so stacked ``(layers, K, C)`` defs pack layerwise),
+* for the ``pallas`` backend the weight is stored tile-padded in the
+  kernel's ``(Kp, Cp)`` layout (:func:`repro.photonic.engine.pallas_tiling`
+  is activation-independent, which is what makes this legal), so decode
+  steps never pad or re-slice the weight again.
+
+``PackedDense`` is a registered pytree whose array leaves carry any
+leading stack dims — ``jax.lax.scan`` over a stacked layer tree slices
+straight through it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.photonic.engine import PhotonicEngine, pallas_tiling
+from repro.core.dpu import quantize_symmetric
+
+
+@jax.tree_util.register_pytree_node_class
+class PackedDense:
+    """A prepacked dense weight: int8 slices + per-column dequant scale.
+
+    ``wq``      — int8, ``(..., K, C)`` (raw) or ``(..., Kp, Cp)`` when
+                  ``tiling`` is set (Pallas tile-padded layout).
+    ``w_scale`` — float32 ``(..., C)`` per-column symmetric scale.
+    ``k, c``    — the *logical* (unpadded) contraction/output dims.
+    ``tiling``  — ``None`` or the static ``(n_chunk, tile_k, tile_c)``
+                  the weight was padded for.
+    """
+
+    __slots__ = ("wq", "w_scale", "k", "c", "tiling")
+
+    def __init__(self, wq, w_scale, k: int, c: int,
+                 tiling: Optional[Tuple[int, int, int]] = None):
+        self.wq = wq
+        self.w_scale = w_scale
+        self.k = k
+        self.c = c
+        self.tiling = tiling
+
+    def tree_flatten(self):
+        return (self.wq, self.w_scale), (self.k, self.c, self.tiling)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        wq, w_scale = children
+        return cls(wq, w_scale, *aux)
+
+    def dequant(self) -> jax.Array:
+        """The float32 weight this pack represents (logical K x C)."""
+        wq = self.wq[..., : self.k, : self.c]
+        return wq.astype(jnp.float32) * self.w_scale.astype(jnp.float32)[
+            ..., None, :
+        ]
+
+    def __repr__(self):
+        return (
+            f"PackedDense(k={self.k}, c={self.c}, stored={tuple(self.wq.shape)}, "
+            f"tiling={self.tiling})"
+        )
+
+
+def site_name(path: Tuple[str, ...]) -> str:
+    """Dotted site name of a dense def at ``path``, normalized to the name
+    the model code passes to ``dense(site=...)`` at call time — routing
+    decisions made here and there must agree for any policy, not just the
+    default.  Wrapper components ("layers", "first_block", "dec_layers",
+    "mamba", ...) are stripped by keeping the suffix from the last
+    "attn"/"ffn" module component; a trailing "cross" dict (whisper's
+    decoder cross-attention) is consumed through the shared attention call
+    sites and maps to "attn.<leaf>"; everything else is its leaf name.
+    """
+    parts = list(path)
+    if not parts:
+        return "root"
+    for i in range(len(parts) - 1, -1, -1):
+        if parts[i] in ("attn", "ffn"):
+            return ".".join(parts[i:])
+        if parts[i] == "cross" and i == len(parts) - 2:
+            return "attn." + parts[-1]
+    return parts[-1]
+
+
+def _is_dense_def(node: Any) -> bool:
+    if not isinstance(node, dict) or "w" not in node:
+        return False
+    w = node["w"]
+    return (
+        not isinstance(w, dict)
+        and hasattr(w, "shape")
+        and len(w.shape) >= 2
+    )
+
+
+def pack_dense(
+    params: dict, engine: PhotonicEngine, *, already_quantized: bool = False
+) -> dict:
+    """Pack one dense-layer param dict ``{"w": ..., ["w_scale"], ["b"]}``.
+
+    ``already_quantized`` selects the int8-stored layout (``w`` int8 +
+    per-column ``w_scale``, see :func:`repro.models.common.quantize_params`)
+    — the existing quantization is reused bit-for-bit, only the layout
+    changes.  Float weights are quantized per column exactly like the
+    per-call path (``quantize_symmetric(w, operand_bits, axis=-2)``).
+    """
+    w = params["w"]
+    if already_quantized or "w_scale" in params:
+        wq = w
+        scale = params["w_scale"].astype(jnp.float32)
+    else:
+        # No dtype cast: bitwise-identical to the per-call
+        # quantize_symmetric(w, operand_bits, axis=0) it replaces.
+        wq, s = quantize_symmetric(w, engine.dpu.operand_bits, axis=-2)
+        scale = jnp.squeeze(s, axis=-2)
+    k, c = wq.shape[-2], wq.shape[-1]
+    tiling = None
+    if engine.backend == "pallas":
+        n_chunk, tile_k, tile_c = pallas_tiling(engine.dpu, k, c)
+        kp = -(-k // tile_k) * tile_k
+        cp = -(-c // tile_c) * tile_c
+        pad = [(0, 0)] * (wq.ndim - 2) + [(0, kp - k), (0, cp - c)]
+        wq = jnp.pad(wq, pad)
+        tiling = (n_chunk, tile_k, tile_c)
+    out = {"w": PackedDense(wq, scale, k, c, tiling)}
+    if "b" in params:
+        out["b"] = params["b"]
+    return out
+
+
+def prepack_params(params: Any, defs: Any, engine: PhotonicEngine) -> Any:
+    """Prepack every policy-routed dense site of a model parameter tree.
+
+    ``defs`` is the matching param-definition tree (``P`` leaves, see
+    ``repro.models.common``); it identifies dense sites and their dotted
+    names, so routing decisions here agree with the site names the model
+    code passes to ``dense(...)`` at call time.  Non-routed sites (e.g.
+    the MoE ``router`` under the default policy) are left untouched and
+    keep executing digitally.
+    """
+
+    def walk(p, d, path):
+        if _is_dense_def(d):
+            if engine.routes(site_name(path)):
+                return pack_dense(p, engine, already_quantized="w_scale" in d)
+            return p
+        if isinstance(d, dict):
+            return {k: walk(p[k], d[k], path + (k,)) for k in d}
+        return p
+
+    return walk(params, defs, ())

@@ -9,6 +9,12 @@ batching pattern, reduced to its JAX-functional core.
 
 For per-slot admission the cache must be *batch-indexable*: we prefill a
 single-row cache and scatter it into the batch cache at the slot index.
+
+Photonic serving is *weight-stationary*: at engine construction every
+policy-routed weight is prepacked (int8 + per-column scale, tile-padded
+for the Pallas backend) via ``repro.photonic.packing.prepack_params``, so
+steady-state decode performs zero weight-quantization work — the software
+analogue of programming the DPU weight MRR banks once per tile.
 """
 
 from __future__ import annotations
@@ -43,8 +49,31 @@ class ServeConfig:
 
 class Engine:
     def __init__(self, arch, model_cfg, params, cfg: ServeConfig):
+        from repro.models.common import engine_from_model_config
+        from repro.photonic.packing import prepack_params
+
         self.arch = arch
         self.model_cfg = model_cfg
+        # Weight-stationary serving (DESIGN.md §9): when a photonic engine
+        # is configured, quantize + pack every routed weight ONCE here —
+        # prefill and decode steps then stream activations against the
+        # packed int8 banks and never touch (or re-quantize) float weights.
+        self.photonic = engine_from_model_config(model_cfg)
+        if self.photonic is not None:
+            pack_engine = self.photonic
+            if getattr(model_cfg, "mla_absorb", False):
+                # Absorbed MLA decode consumes wuk/wuv as raw floats in its
+                # einsums (never through the quantizing dense path); packing
+                # them would change decode numerics vs the per-call path and
+                # add a per-step weight-sized dequant.  Keep them float.
+                pol = dataclasses.replace(
+                    pack_engine.policy,
+                    exclude=pack_engine.policy.exclude + ("wuk", "wuv"),
+                )
+                pack_engine = dataclasses.replace(pack_engine, policy=pol)
+            params = prepack_params(
+                params, arch.param_defs(model_cfg), pack_engine
+            )
         self.params = params
         self.cfg = cfg
         self._decode = jax.jit(

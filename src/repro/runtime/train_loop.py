@@ -114,6 +114,15 @@ def train(
     """Run (or resume) a training job. Returns final state + metrics."""
     opt_cfg = opt_cfg or adamw.AdamWConfig(total_steps=train_cfg.steps)
     stream = SyntheticTokens(data_cfg)
+    # Photonic QAT: construct the engine up front so an invalid operating
+    # point / scope / backend fails here with a readable error instead of
+    # mid-trace inside the first jitted step, and the operator can see
+    # which sites run photonically (STE backward keeps dense gradients).
+    from repro.models.common import engine_from_model_config
+
+    photonic_engine = engine_from_model_config(model_cfg)
+    if photonic_engine is not None:
+        log(f"[train] photonic engine: {photonic_engine.describe()}")
     loss_fn = lambda p, b: arch.loss(p, b, model_cfg)  # noqa: E731
     step_fn = build_train_step(loss_fn, opt_cfg, train_cfg.microbatches)
 
