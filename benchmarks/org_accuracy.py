@@ -123,7 +123,7 @@ def workload_gemm_sqnr(n_sweep, max_rows=32, max_cols=64, max_k=512):
     rng = np.random.default_rng(0)
     out = {}
     for wname, fn in WORKLOADS.items():
-        layer = max(fn(), key=lambda l: l.macs)
+        layer = max(fn(), key=lambda lay: lay.macs)
         r = min(layer.rows, max_rows)
         k = min(layer.k, max_k)
         c = min(layer.cols, max_cols)

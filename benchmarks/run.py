@@ -33,6 +33,7 @@ def main(argv=None) -> None:
         org_accuracy,
         prepack_decode,
         table5_dpu,
+        tp_scaling,
     )
 
     benches = [
@@ -42,6 +43,7 @@ def main(argv=None) -> None:
         ("noise_accuracy", noise_accuracy.main),
         ("org_accuracy", org_accuracy.main),
         ("prepack_decode", prepack_decode.main),
+        ("tp_scaling", tp_scaling.main),
     ]
     # roofline report requires dry-run results; degrade gracefully.
     try:

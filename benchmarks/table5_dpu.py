@@ -4,7 +4,7 @@ across datarates, plus our independent area-model cross-check."""
 import time
 
 from repro.core import scalability as sc
-from repro.core.perfmodel import AcceleratorConfig, area_matched_counts
+from repro.core.perfmodel import area_matched_counts
 
 
 def run():

@@ -1,0 +1,161 @@
+"""Tensor-parallel scaling of the photonic engine (DESIGN.md §10).
+
+Two sweeps, per organization (ASMW / MASW / SMWA):
+
+* **Per-shard analog quality vs TP degree.**  K-sharding a GEMM's
+  reduction axis gives every shard a local DPE fan-in
+  ``N_local = K / shards``; the Table III loss chain and the detector
+  sigma are re-evaluated there (``repro.noise.shard_local_channel``), so
+  sharding *buys SNR back* — and by organization-dependent amounts: the
+  ASMW through loss scales with ``2(N-1)`` rings, MASW with ``N``, the
+  hitless SMWA with a constant 2.  The sweep reports each organization's
+  minimum TP degree whose shard-local SNR covers the B-bit ENOB
+  requirement — the paper's "organization choice changes achievable
+  parallelism" claim, quantified at the system-sharding level.
+
+* **Sharded GEMM throughput vs mesh size.**  Wall-clock tokens/s of the
+  prepacked, shard-mapped ``dense`` path over the host devices actually
+  present (1 on a bare CPU runner; 8 in the multi-device CI tier).
+
+``--smoke`` shrinks the sweeps to a CI-sized subset.
+"""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.dpu import DPUConfig
+from repro.launch import mesh as mesh_mod
+from repro.models.common import ModelConfig, dense
+from repro.noise import build_channel_model, shard_local_channel
+from repro.photonic import engine_for, prepack_params, tensor_parallel
+
+ORGS = ("ASMW", "MASW", "SMWA")
+BITS = 4
+
+
+def enob_requirement_db(bits: int) -> float:
+    """SNR an ideal ``bits``-bit quantizer needs (6.02 B + 1.76 dB)."""
+    return 6.02 * bits + 1.76
+
+
+def snr_sweep(k: int, shard_counts) -> dict:
+    """Shard-local channel quality per organization and TP degree."""
+    out = {}
+    for org in ORGS:
+        rows = {}
+        base = build_channel_model(org, n=k, bits=BITS, datarate_gs=5.0)
+        for s in shard_counts:
+            n_local = k // s
+            ch = shard_local_channel(base, n_local)
+            rows[s] = {
+                "n_local": n_local,
+                "snr_db": round(ch.snr_db, 3),
+                "detector_sigma_lsb": round(ch.detector_sigma_lsb, 5),
+                "through_loss_db": round(ch.through_loss_db, 4),
+                "total_loss_db": round(ch.total_loss_db(), 3),
+            }
+        need = enob_requirement_db(BITS)
+        feasible = [s for s in shard_counts if rows[s]["snr_db"] >= need]
+        out[org] = {
+            "per_shards": rows,
+            "min_shards_for_enob": feasible[0] if feasible else None,
+        }
+    return out
+
+
+def throughput_sweep(k: int, c: int, tokens: int, iters: int) -> dict:
+    """tokens/s of the prepacked TP dense path per available mesh size."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(tokens, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, c)), jnp.float32)
+    defs = {"proj": {"w": w}}
+    dpu = DPUConfig(organization="SMWA", bits=BITS, dpe_size=min(16, k))
+    cfg = ModelConfig(photonic=dpu, photonic_backend="ref")
+    eng = engine_for(dpu, "ref")
+
+    sizes = []
+    tp = 1
+    while tp <= mesh_mod.max_tp_degree():
+        sizes.append(tp)
+        tp *= 2
+
+    out = {}
+    for s in sizes:
+        mesh = mesh_mod.make_tp_smoke_mesh(s)
+        packed = prepack_params(
+            {"proj": {"w": w}}, defs, eng, mesh=mesh if s > 1 else None
+        )["proj"]
+
+        def run(xin, packed=packed, mesh=mesh):
+            with tensor_parallel(mesh, "model"):
+                return dense(packed, xin, cfg, site="proj")
+
+        step = jax.jit(run)
+        jax.block_until_ready(step(x))  # compile
+        t0 = time.time()
+        for _ in range(iters):
+            y = step(x)
+        jax.block_until_ready(y)
+        dt = (time.time() - t0) / iters
+        out[s] = {
+            "us_per_call": round(dt * 1e6, 1),
+            "tokens_per_s": round(tokens / dt, 1),
+        }
+    return out
+
+
+def main(smoke: bool = False) -> dict:
+    k = 128 if smoke else 256
+    shard_counts = [1, 2, 4, 8] if smoke else [1, 2, 4, 8, 16, 32]
+    shard_counts = [s for s in shard_counts if k % s == 0 and k // s >= 1]
+    snr = snr_sweep(k, shard_counts)
+    thr = throughput_sweep(
+        k=k,
+        c=64 if smoke else 128,
+        tokens=32 if smoke else 128,
+        iters=3 if smoke else 10,
+    )
+
+    for org in ORGS:
+        row = snr[org]
+        print(
+            f"{org}: min_shards_for_{BITS}b_enob={row['min_shards_for_enob']} "
+            + " ".join(
+                f"s={s}:snr={row['per_shards'][s]['snr_db']}dB"
+                for s in shard_counts
+            )
+        )
+    for s, row in thr.items():
+        print(f"tp={s}: {row['tokens_per_s']} tokens/s")
+
+    # The hitless SMWA needs the least sharding to reach the ENOB target;
+    # ASMW (2(N-1) through rings) gains the most SNR per doubling.
+    gain = {
+        org: round(
+            snr[org]["per_shards"][shard_counts[-1]]["snr_db"]
+            - snr[org]["per_shards"][1]["snr_db"],
+            3,
+        )
+        for org in ORGS
+    }
+    assert gain["ASMW"] >= gain["SMWA"], gain
+    return {
+        "k": k,
+        "bits": BITS,
+        "enob_requirement_db": enob_requirement_db(BITS),
+        "devices": len(jax.devices()),
+        "snr_vs_shards": snr,
+        "snr_gain_db_at_max_shards": gain,
+        "throughput_vs_tp": thr,
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    print(main(smoke=ap.parse_args().smoke))

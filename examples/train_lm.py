@@ -14,7 +14,6 @@ import argparse
 import dataclasses
 import tempfile
 
-import jax.numpy as jnp
 
 from repro.core.dpu import DPUConfig
 from repro.data.pipeline import DataConfig

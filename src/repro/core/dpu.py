@@ -47,7 +47,11 @@ import jax.numpy as jnp
 
 from repro.core import scalability
 from repro.core.params import PhotonicParams
-from repro.noise.channel import ChannelModel, analog_pass_psums
+from repro.noise.channel import (
+    ChannelModel,
+    analog_pass_psums,
+    shard_local_channel,
+)
 from repro.noise.stages import (
     data_tweak,
     fold_seed,
@@ -129,6 +133,28 @@ class DPUConfig:
             )
         return None
 
+    def shard_local(self, k_local: int) -> "DPUConfig":
+        """The per-shard operating point of a K-sharded GEMM.
+
+        The paper's Summation manipulation accumulates per-DPE partials in
+        the digital domain; sharding the contraction axis over a device
+        mesh is the same semantics at system scale, and it changes the
+        physics: each shard's DPE fan-in is ``N_local = min(N, K_local)``,
+        and the Table II/III channel must be evaluated there rather than
+        at the global ``N`` (:func:`repro.noise.shard_local_channel`).
+        Ideal configs only clamp the chunk size, which is numerically
+        inert — sharded and unsharded ideal GEMMs stay bitwise equal.
+        """
+        n_local = min(self.n, max(int(k_local), 1))
+        updates: dict = {}
+        if self.dpe_size != n_local:
+            updates["dpe_size"] = n_local
+        if self.channel is not None:
+            ch = shard_local_channel(self.channel, n_local)
+            if ch is not self.channel:
+                updates["channel"] = ch
+        return dataclasses.replace(self, **updates) if updates else self
+
     def noise_seed_array(
         self, prng_key: Optional[jax.Array], *, what: str = "noise"
     ) -> jax.Array:
@@ -149,18 +175,26 @@ class DPUConfig:
 # Quantization
 # ---------------------------------------------------------------------------
 def quantize_symmetric(
-    x: jax.Array, bits: int, axis: Optional[int] = None
+    x: jax.Array,
+    bits: int,
+    axis: Optional[int] = None,
+    *,
+    amax: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Symmetric linear quantization to signed ``bits`` integers.
 
     Returns ``(q, scale)`` with ``x ~= q * scale``; ``q`` in
     ``[-(2^{bits-1}-1), 2^{bits-1}-1]`` (int8 storage for bits<=8, int32
-    otherwise).
+    otherwise).  ``amax`` overrides the local abs-max reduction — the
+    K-sharded engine passes the ``pmax``-reduced global abs-max so every
+    shard quantizes with the bitwise-identical scale the unsharded path
+    would use (max is exact under any reduction order).
     """
     qmax = float(2 ** (bits - 1) - 1)
-    amax = jnp.max(jnp.abs(x)) if axis is None else jnp.max(
-        jnp.abs(x), axis=axis, keepdims=True
-    )
+    if amax is None:
+        amax = jnp.max(jnp.abs(x)) if axis is None else jnp.max(
+            jnp.abs(x), axis=axis, keepdims=True
+        )
     # Explicit reciprocal multiply: XLA's algebraic simplifier rewrites
     # divide-by-constant to exactly this inside compiled contexts (jit /
     # scan bodies), so spelling it out keeps the scale BITWISE identical

@@ -10,7 +10,6 @@ model is reported alongside as a cross-check (benchmarks/table5_dpu.py).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict
 
 from repro.core import scalability

@@ -26,7 +26,6 @@ from repro.core.params import (
     K_BOLTZMANN,
     PhotonicParams,
     Q_ELECTRON,
-    dbm_to_watts,
     watts_to_dbm,
 )
 

@@ -132,7 +132,6 @@ def _simulate_layer(layer: GemmLayer, cfg: AcceleratorConfig) -> LayerStats:
     time_s = stream_s + p.reduction_network.latency_s
 
     # --- energy -------------------------------------------------------------
-    adc = p.adc(cfg.datarate_gs)
     stream_energy = busy_s * cfg.streaming_power_w()
     tune_energy = n_tiles * (
         cfg.tune_power_w_per_ring * tune * (cfg.n * cfg.m if layer.groups == 1 else cfg.m)

@@ -32,7 +32,7 @@ from typing import Optional
 import jax
 
 from repro.core.dpu import DPUConfig
-from repro.photonic.engine import PhotonicEngine, engine_for
+from repro.photonic.engine import engine_for
 
 
 def photonic_gemm_int(

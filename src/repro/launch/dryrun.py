@@ -88,7 +88,6 @@ def run_cell(
     eng = engine_from_model_config(cfg)
 
     defs = arch.param_defs(cfg)
-    param_axes = axes_tree(defs)
     param_sds = jax.eval_shape(
         lambda k: init_tree(defs, k, cfg.param_dtype),
         jax.ShapeDtypeStruct((2,), jnp.uint32),

@@ -37,6 +37,28 @@ def make_smoke_mesh():
     return build_mesh((1, 1), ("data", "model"))
 
 
+def max_tp_degree(limit: int = 8) -> int:
+    """Largest power-of-two tensor-parallel degree the available devices
+    support (1 on a bare CPU; 8 in the multi-device CI tier, which forces
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+    n = min(len(jax.devices()), limit)
+    tp = 1
+    while tp * 2 <= n:
+        tp *= 2
+    return tp
+
+
+def make_tp_smoke_mesh(tp: int | None = None):
+    """("data", "model") mesh with a real tensor-parallel axis over host
+    devices — the mesh the sharded photonic engine tests/benchmarks run
+    on.  ``tp`` defaults to :func:`max_tp_degree`; the data axis stays 1
+    (TP is the axis under test)."""
+    if tp is None:
+        tp = max_tp_degree()
+    require_devices(tp)
+    return build_mesh((1, tp), ("data", "model"))
+
+
 def require_devices(n: int) -> None:
     have = len(jax.devices())
     if have < n:

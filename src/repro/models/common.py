@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -303,17 +303,38 @@ def dense(
     threads an explicit randomness source end-to-end (a noisy channel
     with neither a key nor ``DPUConfig.noise_seed`` raises the documented
     ``ValueError``).
+
+    Under an active tensor-parallel scope
+    (``repro.photonic.sharded.tensor_parallel`` / ``manual_tp``) routed
+    GEMMs K-shard over the mesh axis: shard-local channel at ``N_local``,
+    (site, layer, shard)-folded noise, digital-domain ``psum`` — bitwise
+    equal to the single-device path under an ideal channel.
     """
-    from repro.photonic.packing import PackedDense
+    from repro.photonic import sharded as tp
 
     w = params["w"]
     eng = engine_from_model_config(cfg)
+    y = tp.maybe_tp_matmul(
+        eng, params, x, cfg, site=site, fold=layer, prng_key=prng_key
+    )
+    if y is None:
+        y = _single_device_matmul(
+            eng, params, w, x, cfg, site=site, layer=layer, prng_key=prng_key
+        )
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def _single_device_matmul(eng, params, w, x, cfg, *, site, layer, prng_key):
+    """The non-sharded product of :func:`dense` (every weight layout)."""
+    from repro.photonic.packing import PackedDense
+
     if isinstance(w, PackedDense):
         if eng is None:
-            y = x @ w.dequant().astype(x.dtype)
-        else:
-            y = eng.matmul(x, w, site=site, fold=layer, prng_key=prng_key)
-    elif "w_scale" in params:
+            return x @ w.dequant().astype(x.dtype)
+        return eng.matmul(x, w, site=site, fold=layer, prng_key=prng_key)
+    if "w_scale" in params:
         # int8-stored weights through the DPU integer datapath (legacy
         # layout; the engine wraps them as an unpadded pack on the fly).
         if eng is None:
@@ -324,14 +345,10 @@ def dense(
         packed = PackedDense(
             w, params["w_scale"], w.shape[-2], w.shape[-1], tiling=None
         )
-        y = eng.matmul(x, packed, site=site, fold=layer, prng_key=prng_key)
-    elif eng is not None and cfg.photonic_scope == "weights":
-        y = eng.matmul_float(x, w, site=site, fold=layer, prng_key=prng_key)
-    else:
-        y = x @ w.astype(x.dtype)
-    if "b" in params:
-        y = y + params["b"].astype(y.dtype)
-    return y
+        return eng.matmul(x, packed, site=site, fold=layer, prng_key=prng_key)
+    if eng is not None and cfg.photonic_scope == "weights":
+        return eng.matmul_float(x, w, site=site, fold=layer, prng_key=prng_key)
+    return x @ w.astype(x.dtype)
 
 
 def quantize_params(params: Any, defs: Any) -> Any:

@@ -10,7 +10,6 @@ DeepSeek's dense first layer) become separate scanned groups (DESIGN.md §5).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

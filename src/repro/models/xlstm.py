@@ -282,7 +282,6 @@ def xlstm_def(cfg: ModelConfig) -> Dict[str, Any]:
 
 def _xlstm_body(params, x, cfg: ModelConfig, mode: str, states=None):
     """Shared scan over groups for train ('full'), prefill, decode."""
-    n_groups = cfg.num_layers // cfg.slstm_every
 
     def group(carry, inp):
         x = carry

@@ -12,6 +12,7 @@ from repro.noise.channel import (
     analog_pass_psums,
     apply_channel_psum,
     build_channel_model,
+    shard_local_channel,
 )
 from repro.noise.stages import (
     adc_quantize,
@@ -32,6 +33,7 @@ __all__ = [
     "analog_pass_psums",
     "apply_channel_psum",
     "build_channel_model",
+    "shard_local_channel",
     "adc_quantize",
     "data_tweak",
     "detector_noise",

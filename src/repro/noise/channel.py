@@ -78,6 +78,14 @@ class ChannelModel:
     delivered_dbm: float = 0.0
     snr_db: float = math.inf
 
+    # Builder provenance (set by :func:`build_channel_model`): the as-given
+    # arguments, minus ``n``, that produced this model.  Lets
+    # :func:`shard_local_channel` re-derive the n-dependent stages at a
+    # smaller fan-in (K-sharded GEMMs, repro.photonic.sharded) instead of
+    # carrying the global-N loss chain into every shard.  ``None`` for
+    # hand-constructed models (which then keep their magnitudes as given).
+    builder: Optional[tuple] = None
+
     @property
     def analog(self) -> bool:
         """True when any float-valued analog stage is active (the datapath
@@ -163,6 +171,7 @@ def build_channel_model(
     full laser power), which isolates the crosstalk stages in ablations.
     """
     org = organization.upper()
+    m_given = m  # provenance: record m as-given (None = paper's m=n rule)
     params = params or scalability.CALIBRATED
     if n is None:
         n = scalability.calibrated_max_n(org, bits, datarate_gs)
@@ -232,6 +241,18 @@ def build_channel_model(
         if xt.filter_truncation:
             alpha = 1.0 - 10.0 ** (-EFFECT_BUDGET_DB["filter_truncation"] / 20.0)
 
+    builder = (
+        org,
+        params,
+        m_given,
+        bits,
+        datarate_gs,
+        adc_bits,
+        enable_loss,
+        enable_crosstalk,
+        enable_detector_noise,
+        enable_adc,
+    )
     return ChannelModel(
         organization=org,
         n=n,
@@ -252,6 +273,80 @@ def build_channel_model(
         penalty_db=penalty_db,
         delivered_dbm=delivered_dbm,
         snr_db=snr_db,
+        builder=builder,
+    )
+
+
+def shard_local_channel(channel: ChannelModel, n_local: int) -> ChannelModel:
+    """The channel model one shard of a K-sharded GEMM sees.
+
+    Sharding the contraction (fan-in) axis over ``shards`` devices gives
+    each shard a local fan-in ``N_local = min(N, K/shards)``; the through
+    loss (Table III: ``2(N-1)`` / ``N`` / ``2`` rings), the propagation
+    length, the delivered power, and therefore the detector sigma all
+    shrink with it, while the crosstalk couplings and the ADC are
+    per-neighbor/per-sample quantities and carry over unchanged.  Stages
+    the caller disabled stay disabled (``disable``/``replace`` masks are
+    re-applied on top of the rebuilt model).
+
+    Models built by :func:`build_channel_model` are re-derived from their
+    recorded builder arguments at ``n_local``; hand-constructed models
+    (no provenance) keep their magnitudes and only shrink the geometry.
+    """
+    n_local = max(int(n_local), 1)
+    if n_local >= channel.n:
+        return channel
+    if channel.builder is None:
+        return dataclasses.replace(
+            channel,
+            n=n_local,
+            num_wavelengths=min(channel.num_wavelengths, n_local),
+        )
+    (
+        org,
+        params,
+        m_given,
+        bits,
+        datarate_gs,
+        adc_bits,
+        enable_loss,
+        enable_crosstalk,
+        enable_detector_noise,
+        enable_adc,
+    ) = channel.builder
+    def rebuild(n):
+        return build_channel_model(
+            org,
+            params,
+            n=n,
+            m=m_given,
+            bits=bits,
+            datarate_gs=datarate_gs,
+            adc_bits=adc_bits,
+            enable_loss=enable_loss,
+            enable_crosstalk=enable_crosstalk,
+            enable_detector_noise=enable_detector_noise,
+            enable_adc=enable_adc,
+        )
+
+    rebuilt = rebuild(n_local)
+    # Re-apply the caller's per-stage state: the n-independent magnitudes
+    # (crosstalk couplings, filter alpha, ADC range) are taken from the
+    # *current* channel so disable()/replace() masks survive the rebuild.
+    # The detector sigma is n-dependent and is re-derived — unless the
+    # caller replaced it with a custom value (it no longer matches what
+    # the builder produced at the original N, e.g. a noise-margin
+    # ablation), in which case the override is preserved as-is.
+    sigma = rebuilt.detector_sigma_lsb
+    if channel.detector_sigma_lsb != rebuild(channel.n).detector_sigma_lsb:
+        sigma = channel.detector_sigma_lsb
+    return dataclasses.replace(
+        rebuilt,
+        intermod_eps=channel.intermod_eps,
+        crossweight_eps=channel.crossweight_eps,
+        filter_alpha=channel.filter_alpha,
+        adc_bits=channel.adc_bits,
+        detector_sigma_lsb=sigma,
     )
 
 

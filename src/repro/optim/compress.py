@@ -87,7 +87,6 @@ def ring_int8_allreduce(tree: Any, axis_name) -> Any:
 
         acc = jax.lax.fori_loop(0, n - 1, rs_step, chunks)
         # device d now owns the fully reduced chunk (d + 1) % n
-        own = (idx + 1) % n
 
         # all-gather ring: at step t, device d sends chunk (d+1-t) (complete
         # by induction) and overwrites chunk (d-t) with its neighbour's.

@@ -17,12 +17,22 @@ image of that: quantize/pack the weight once, stream activations through.
 
 from repro.photonic.engine import PhotonicEngine, SitePolicy, engine_for
 from repro.photonic.packing import PackedDense, pack_dense, prepack_params
+from repro.photonic.sharded import (
+    manual_tp,
+    psum_int_gemm,
+    shard_local_engine,
+    tensor_parallel,
+)
 
 __all__ = [
     "PhotonicEngine",
     "SitePolicy",
     "PackedDense",
     "engine_for",
+    "manual_tp",
     "pack_dense",
     "prepack_params",
+    "psum_int_gemm",
+    "shard_local_engine",
+    "tensor_parallel",
 ]

@@ -50,6 +50,11 @@ from repro.noise.stages import (
 
 BACKENDS = ("ref", "pallas", "exact")
 
+# Stream-domain tag folded in ahead of a shard index, so the (site, fold=i)
+# and (site, shard=i) streams never coincide (repro.photonic.sharded folds
+# the mesh-axis index of each K-shard through this).
+SHARD_STREAM_TAG = 0x5348
+
 
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
@@ -165,6 +170,7 @@ class PhotonicEngine:
         prng_key: Optional[jax.Array],
         xq: jax.Array,
         wq: jax.Array,
+        shard=None,
     ) -> jax.Array:
         """uint32 noise-stream seed for one GEMM call.
 
@@ -174,8 +180,11 @@ class PhotonicEngine:
         index (e.g. the layer counter of a ``lax.scan`` stack) are folded
         in *before* the operand-content tweak, so same-shaped, same-seed
         GEMMs at different sites/layers decorrelate even when their
-        operand contents coincide.  ``site=None, fold=None`` is bitwise
-        the legacy derivation.
+        operand contents coincide.  ``shard`` is the (traced) mesh-axis
+        index of a K-sharded call, folded behind a tag so shards draw
+        decorrelated noise and the shard stream never collides with a
+        layer-fold stream.  ``site=None, fold=None, shard=None`` is
+        bitwise the legacy derivation.
         """
         if prng_key is not None:
             key = prng_key
@@ -183,6 +192,9 @@ class PhotonicEngine:
                 key = jax.random.fold_in(key, site_hash(site) & 0x7FFFFFFF)
             if fold is not None:
                 key = jax.random.fold_in(key, fold)
+            if shard is not None:
+                key = jax.random.fold_in(key, SHARD_STREAM_TAG)
+                key = jax.random.fold_in(key, shard)
             seed = seed_from_key(key)
         else:
             seed = self.dpu.noise_seed_array(None)
@@ -190,6 +202,8 @@ class PhotonicEngine:
                 seed = fold_seed(seed, jnp.uint32(site_hash(site)))
             if fold is not None:
                 seed = fold_seed(seed, fold)
+            if shard is not None:
+                seed = fold_seed(seed, jnp.uint32(SHARD_STREAM_TAG), shard)
         # Operand-content tweak (zero-padding is hash-neutral, so padded
         # prepacked weights derive the same stream as per-call operands).
         return data_tweak(seed, xq, wq)
@@ -202,6 +216,7 @@ class PhotonicEngine:
         *,
         site: Optional[str] = None,
         fold=None,
+        shard=None,
         prng_key: Optional[jax.Array] = None,
         logical_kc: Optional[Tuple[int, int]] = None,
         tiling: Optional[Tuple[int, int, int]] = None,
@@ -213,7 +228,9 @@ class PhotonicEngine:
 
         ``logical_kc``/``tiling`` describe a prepacked, tile-padded weight
         (see :class:`repro.photonic.packing.PackedDense`); without them
-        the weight is taken at face value and padded per call.
+        the weight is taken at face value and padded per call.  ``shard``
+        is the mesh-axis index of a K-sharded call (see
+        :meth:`stream_seed`); it only perturbs the noise stream.
         """
         k, c = logical_kc if logical_kc is not None else wq.shape[-2:]
         if self.backend == "exact":
@@ -225,7 +242,9 @@ class PhotonicEngine:
         adc_bits = channel.adc_bits if channel is not None else cfg.adc_bits
         noisy = analog and channel.detector_sigma_lsb > 0.0
         seed = (
-            self.stream_seed(site, fold, prng_key, xq, wq) if noisy else None
+            self.stream_seed(site, fold, prng_key, xq, wq, shard=shard)
+            if noisy
+            else None
         )
 
         if self.backend == "ref":

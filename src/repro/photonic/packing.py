@@ -37,34 +37,58 @@ class PackedDense:
     """A prepacked dense weight: int8 slices + per-column dequant scale.
 
     ``wq``      — int8, ``(..., K, C)`` (raw) or ``(..., Kp, Cp)`` when
-                  ``tiling`` is set (Pallas tile-padded layout).
-    ``w_scale`` — float32 ``(..., C)`` per-column symmetric scale.
-    ``k, c``    — the *logical* (unpadded) contraction/output dims.
+                  ``tiling`` is set (Pallas tile-padded layout).  With
+                  ``shards > 1`` the stored rows are the concatenation of
+                  the per-shard banks: ``(..., shards * Kp_local, Cp)``,
+                  each bank independently tile-padded for its *local*
+                  tiling, so a row-wise ``PartitionSpec`` hands every mesh
+                  shard exactly its padded bank.
+    ``w_scale`` — float32 ``(..., C)`` per-column symmetric scale.  Always
+                  the *global* (full-K) per-column scale — replicated over
+                  the mesh; shard partials dequantize consistently.
+    ``k, c``    — the *logical* (unpadded, global) contraction/output dims.
     ``tiling``  — ``None`` or the static ``(n_chunk, tile_k, tile_c)``
-                  the weight was padded for.
+                  the weight was padded for (shard-local when sharded).
+    ``shards``  — K-shard count of the stored layout (1 = unsharded).
     """
 
-    __slots__ = ("wq", "w_scale", "k", "c", "tiling")
+    __slots__ = ("wq", "w_scale", "k", "c", "tiling", "shards")
 
     def __init__(self, wq, w_scale, k: int, c: int,
-                 tiling: Optional[Tuple[int, int, int]] = None):
+                 tiling: Optional[Tuple[int, int, int]] = None,
+                 shards: int = 1):
         self.wq = wq
         self.w_scale = w_scale
         self.k = k
         self.c = c
         self.tiling = tiling
+        self.shards = shards
 
     def tree_flatten(self):
-        return (self.wq, self.w_scale), (self.k, self.c, self.tiling)
+        return (self.wq, self.w_scale), (self.k, self.c, self.tiling,
+                                         self.shards)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         wq, w_scale = children
         return cls(wq, w_scale, *aux)
 
+    @property
+    def k_local(self) -> int:
+        """Per-shard logical contraction length."""
+        return self.k // self.shards
+
     def dequant(self) -> jax.Array:
         """The float32 weight this pack represents (logical K x C)."""
-        wq = self.wq[..., : self.k, : self.c]
+        wq = self.wq
+        if self.shards > 1:
+            lead = wq.shape[:-2]
+            kp_local = wq.shape[-2] // self.shards
+            wq = wq.reshape(*lead, self.shards, kp_local, wq.shape[-1])
+            wq = wq[..., : self.k_local, : self.c]
+            wq = wq.reshape(*lead, self.k, self.c)
+        else:
+            wq = wq[..., : self.k, : self.c]
         return wq.astype(jnp.float32) * self.w_scale.astype(jnp.float32)[
             ..., None, :
         ]
@@ -72,7 +96,7 @@ class PackedDense:
     def __repr__(self):
         return (
             f"PackedDense(k={self.k}, c={self.c}, stored={tuple(self.wq.shape)}, "
-            f"tiling={self.tiling})"
+            f"tiling={self.tiling}, shards={self.shards})"
         )
 
 
@@ -109,7 +133,11 @@ def _is_dense_def(node: Any) -> bool:
 
 
 def pack_dense(
-    params: dict, engine: PhotonicEngine, *, already_quantized: bool = False
+    params: dict,
+    engine: PhotonicEngine,
+    *,
+    already_quantized: bool = False,
+    shards: int = 1,
 ) -> dict:
     """Pack one dense-layer param dict ``{"w": ..., ["w_scale"], ["b"]}``.
 
@@ -118,6 +146,12 @@ def pack_dense(
     — the existing quantization is reused bit-for-bit, only the layout
     changes.  Float weights are quantized per column exactly like the
     per-call path (``quantize_symmetric(w, operand_bits, axis=-2)``).
+
+    ``shards > 1`` stores the K-sharded layout: quantization stays global
+    (bit-identical scales), then the int8 bank is split into ``shards``
+    row blocks of ``K/shards`` and each block is tile-padded for the
+    *shard-local* engine (``pallas_tiling`` of ``dpu.shard_local``), so
+    the concatenated rows shard contiguously over a mesh axis.
     """
     w = params["w"]
     if already_quantized or "w_scale" in params:
@@ -129,21 +163,37 @@ def pack_dense(
         wq, s = quantize_symmetric(w, engine.dpu.operand_bits, axis=-2)
         scale = jnp.squeeze(s, axis=-2)
     k, c = wq.shape[-2], wq.shape[-1]
+    if shards > 1 and k % shards:
+        raise ValueError(f"K={k} is not divisible by shards={shards}")
+    k_local = k // shards
     tiling = None
     if engine.backend == "pallas":
-        n_chunk, tile_k, tile_c = pallas_tiling(engine.dpu, k, c)
-        kp = -(-k // tile_k) * tile_k
+        tile_dpu = engine.dpu.shard_local(k_local) if shards > 1 else engine.dpu
+        n_chunk, tile_k, tile_c = pallas_tiling(tile_dpu, k_local, c)
+        kp = -(-k_local // tile_k) * tile_k
         cp = -(-c // tile_c) * tile_c
-        pad = [(0, 0)] * (wq.ndim - 2) + [(0, kp - k), (0, cp - c)]
+        lead = wq.shape[:-2]
+        if shards > 1:
+            wq = wq.reshape(*lead, shards, k_local, c)
+        pad = [(0, 0)] * (wq.ndim - 2) + [(0, kp - k_local), (0, cp - c)]
         wq = jnp.pad(wq, pad)
+        if shards > 1:
+            wq = wq.reshape(*lead, shards * kp, cp)
         tiling = (n_chunk, tile_k, tile_c)
-    out = {"w": PackedDense(wq, scale, k, c, tiling)}
+    out = {"w": PackedDense(wq, scale, k, c, tiling, shards)}
     if "b" in params:
         out["b"] = params["b"]
     return out
 
 
-def prepack_params(params: Any, defs: Any, engine: PhotonicEngine) -> Any:
+def prepack_params(
+    params: Any,
+    defs: Any,
+    engine: PhotonicEngine,
+    *,
+    mesh=None,
+    axis: str = "model",
+) -> Any:
     """Prepack every policy-routed dense site of a model parameter tree.
 
     ``defs`` is the matching param-definition tree (``P`` leaves, see
@@ -152,12 +202,55 @@ def prepack_params(params: Any, defs: Any, engine: PhotonicEngine) -> Any:
     code passes to ``dense(...)`` at call time.  Non-routed sites (e.g.
     the MoE ``router`` under the default policy) are left untouched and
     keep executing digitally.
+
+    With ``mesh`` (and the ``axis`` mesh axis sized > 1) the int8 banks
+    are stored in the K-sharded layout and placed with the repo's
+    logical-axis sharding rules (``runtime/sharding.py``: weight fan-in
+    on the tensor-parallel axis, per-column scales replicated), ready for
+    :mod:`repro.photonic.sharded` execution.  Sites whose K does not
+    divide the axis fall back to the unsharded layout (and stay on the
+    single-device path at call time).
     """
+    shards = 1
+    if mesh is not None and axis in mesh.shape:
+        shards = int(mesh.shape[axis])
+
+    def place(packed: dict) -> dict:
+        """device_put the pack onto the mesh via the logical-axis rules."""
+        from repro.runtime import sharding as shd
+
+        rules = {"fanin": axis, "out": None}
+        pd = packed["w"]
+        lead = (None,) * (pd.wq.ndim - 2)
+        wq_sh = shd.named_sharding(
+            mesh, pd.wq.shape, lead + ("fanin", "out"), rules
+        )
+        sc_sh = shd.named_sharding(
+            mesh, pd.w_scale.shape, (None,) * pd.w_scale.ndim, rules
+        )
+        packed = dict(packed)
+        packed["w"] = PackedDense(
+            jax.device_put(pd.wq, wq_sh),
+            jax.device_put(pd.w_scale, sc_sh),
+            pd.k,
+            pd.c,
+            pd.tiling,
+            pd.shards,
+        )
+        return packed
 
     def walk(p, d, path):
         if _is_dense_def(d):
             if engine.routes(site_name(path)):
-                return pack_dense(p, engine, already_quantized="w_scale" in d)
+                k = p["w"].shape[-2]
+                site_shards = shards if k % shards == 0 else 1
+                packed = pack_dense(
+                    p,
+                    engine,
+                    already_quantized="w_scale" in d,
+                    shards=site_shards,
+                )
+                return place(packed) if site_shards > 1 else packed
             return p
         if isinstance(d, dict):
             return {k: walk(p[k], d[k], path + (k,)) for k in d}

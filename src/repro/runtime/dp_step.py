@@ -20,11 +20,9 @@ GSPMD pathology bites.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro import compat
 from repro.compat import PartitionSpec as P
@@ -39,19 +37,38 @@ def make_dp_train_step(
     mesh: jax.sharding.Mesh,
     *,
     compress_grads: bool = False,
+    tp_axis: Optional[str] = None,
 ) -> Callable:
-    """Returns jit-able (params, opt_state, batch) -> (params, opt, loss, gnorm)."""
+    """Returns jit-able (params, opt_state, batch) -> (params, opt, loss, gnorm).
+
+    ``tp_axis`` reserves one mesh axis for photonic tensor parallelism:
+    the batch shards over the remaining axes only, and inside the body
+    every routed dense GEMM K-shards over ``tp_axis`` with shard-local
+    channel models (``repro.photonic.sharded.manual_tp`` — collectives
+    only, since a nested shard_map is illegal here).  Params stay
+    replicated, so TP-axis peers hold identical grads and the single
+    all-reduce below stays correct unchanged.
+    """
     axes: Tuple[str, ...] = tuple(mesh.axis_names)
+    if tp_axis is not None and tp_axis not in axes:
+        raise ValueError(f"tp_axis {tp_axis!r} not in mesh axes {axes}")
     n_dev = 1
     for a in axes:
         n_dev *= mesh.shape[a]
 
-    batch_spec = P(axes)  # leading (batch) dim sharded over every axis
+    dp_axes = tuple(a for a in axes if a != tp_axis)
+    batch_spec = P(dp_axes)  # leading (batch) dim sharded over the DP axes
 
     def step(params, opt_state, batch):
         # constraints are GSPMD-only; inside shard_map all axes are manual
         with shd.no_constraints():
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            if tp_axis is not None:
+                from repro.photonic import sharded as tp_sharded
+
+                with tp_sharded.manual_tp(tp_axis):
+                    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            else:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         if compress_grads:
             # int8-wire ring all-reduce: halves the only collective's bytes
             grads = ring_int8_allreduce(grads, axes)

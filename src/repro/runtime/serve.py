@@ -19,8 +19,9 @@ analogue of programming the DPU weight MRR banks once per tile.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,12 +49,33 @@ class ServeConfig:
 
 
 class Engine:
-    def __init__(self, arch, model_cfg, params, cfg: ServeConfig):
+    def __init__(
+        self,
+        arch,
+        model_cfg,
+        params,
+        cfg: ServeConfig,
+        *,
+        mesh=None,
+        tp_axis: str = "model",
+    ):
         from repro.models.common import engine_from_model_config
         from repro.photonic.packing import prepack_params
 
         self.arch = arch
         self.model_cfg = model_cfg
+        # Tensor-parallel photonic serving: with a mesh whose `tp_axis` is
+        # sized > 1, the int8 banks prepack in the K-sharded layout
+        # (shard-local tile padding, fan-in rows on the TP axis, scales
+        # replicated) and every prefill/decode step runs its routed GEMMs
+        # inside shard_map with shard-local channel models (DESIGN.md §10).
+        self.mesh = mesh
+        self.tp_axis = tp_axis
+        self._tp_size = (
+            int(mesh.shape[tp_axis])
+            if mesh is not None and tp_axis in mesh.shape
+            else 1
+        )
         # Weight-stationary serving (DESIGN.md §9): when a photonic engine
         # is configured, quantize + pack every routed weight ONCE here —
         # prefill and decode steps then stream activations against the
@@ -72,7 +94,11 @@ class Engine:
                 )
                 pack_engine = dataclasses.replace(pack_engine, policy=pol)
             params = prepack_params(
-                params, arch.param_defs(model_cfg), pack_engine
+                params,
+                arch.param_defs(model_cfg),
+                pack_engine,
+                mesh=mesh if self._tp_size > 1 else None,
+                axis=tp_axis,
             )
         self.params = params
         self.cfg = cfg
@@ -101,15 +127,25 @@ class Engine:
             and isinstance(x[0], tuple) and isinstance(x[1], tuple),
         )
 
+    def _tp_scope(self):
+        """The tensor-parallel scope every model call runs under (a no-op
+        without a TP mesh); consulted at trace time by ``dense``."""
+        if self.photonic is not None and self._tp_size > 1:
+            from repro.photonic import sharded
+
+            return sharded.tensor_parallel(self.mesh, self.tp_axis)
+        return contextlib.nullcontext()
+
     # -- admission -----------------------------------------------------------
     def _admit(self, req: Request, slot: int):
         """Prefill the prompt for one slot and merge into the batch cache."""
         b = self.cfg.batch_size
         prompt = jnp.asarray(req.prompt)[None, :]  # (1, T)
         batch = {"tokens": jnp.tile(prompt, (b, 1))}
-        logits, cache = self.arch.prefill(
-            self.params, batch, self.model_cfg, self.cfg.max_seq
-        )
+        with self._tp_scope():
+            logits, cache = self.arch.prefill(
+                self.params, batch, self.model_cfg, self.cfg.max_seq
+            )
         self.stats["prefills"] += 1
         if self.cache is None:
             self.cache = cache
@@ -137,7 +173,10 @@ class Engine:
                 self._admit(queue.pop(0), slot)
         if all(s is None for s in self.slots):
             return
-        logits, self.cache = self._decode(self.params, self.tokens, self.cache)
+        with self._tp_scope():
+            logits, self.cache = self._decode(
+                self.params, self.tokens, self.cache
+            )
         self.stats["decode_steps"] += 1
         logits = logits[:, -1, : self.model_cfg.vocab_size]
         if self.cfg.greedy:

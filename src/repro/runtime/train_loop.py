@@ -22,12 +22,10 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from pathlib import Path
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import compat
 from repro.checkpoint import ckpt
@@ -108,6 +106,7 @@ def train(
     train_cfg: TrainConfig,
     opt_cfg: Optional[adamw.AdamWConfig] = None,
     mesh: Optional[jax.sharding.Mesh] = None,
+    tp_axis: Optional[str] = None,  # K-shard photonic GEMMs over this axis
     fail_at_step: Optional[int] = None,  # test hook: simulated crash
     log: Callable[[str], None] = print,
 ) -> Dict[str, Any]:
@@ -174,6 +173,18 @@ def train(
     watchdog = StragglerWatchdog(train_cfg.straggler_factor)
     losses = []
     pending_save = None
+    # Tensor-parallel photonic QAT: the TP scope must be live whenever the
+    # jitted step (re)traces, i.e. across the whole loop.  Entered as the
+    # last statement before the try so the matching __exit__ in `finally`
+    # cannot be skipped by a setup failure (a leaked thread-local scope
+    # would silently re-route every later dense() in this process).
+    tp_ctx = None
+    if tp_axis is not None and mesh is not None and photonic_engine is not None:
+        from repro.photonic import sharded as tp_sharded
+
+        log(f"[train] photonic tensor-parallel over mesh axis {tp_axis!r}")
+        tp_ctx = tp_sharded.tensor_parallel(mesh, tp_axis)
+        tp_ctx.__enter__()
     try:
         for step in range(step0, train_cfg.steps):
             if fail_at_step is not None and step == fail_at_step:
@@ -207,6 +218,8 @@ def train(
             pending_save.join()
         for sig, h in old_handlers.items():
             signal.signal(sig, h)
+        if tp_ctx is not None:
+            tp_ctx.__exit__(None, None, None)
         if ctx is not None:
             ctx.__exit__(None, None, None)
 

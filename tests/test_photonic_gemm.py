@@ -17,7 +17,6 @@ from repro.core.dpu import (
 )
 from repro.kernels.photonic_gemm.ref import (
     exact_int_gemm,
-    photonic_gemm_ref,
     slice_decompose,
 )
 from repro.kernels.photonic_gemm.ops import photonic_gemm, photonic_gemm_int

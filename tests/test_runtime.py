@@ -36,7 +36,6 @@ class TestDataPipeline:
         assert not np.array_equal(s1.batch_at(5)["tokens"], s1.batch_at(6)["tokens"])
 
     def test_shards_are_disjoint_slices(self):
-        full = SyntheticTokens(DATA).batch_at(3)
         sh0 = SyntheticTokens(DATA, 0, 2).batch_at(3)
         sh1 = SyntheticTokens(DATA, 1, 2).batch_at(3)
         assert sh0["tokens"].shape[0] == DATA.global_batch // 2

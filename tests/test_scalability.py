@@ -7,7 +7,7 @@ from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import scalability as sc
 from repro.core import organizations as orgs
-from repro.core.params import PhotonicParams, watts_to_dbm
+from repro.core.params import PhotonicParams
 
 
 class TestPaperValidation:

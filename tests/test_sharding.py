@@ -3,7 +3,6 @@ ZeRO-1 axes, rule overrides)."""
 
 import jax
 import numpy as np
-import pytest
 from repro.compat import Mesh, PartitionSpec as P, abstract_mesh
 from repro.runtime import sharding as shd
 
