@@ -28,15 +28,21 @@ def run(models=MODELS, drs=DRS):
     res = evaluate_all(models=models, datarates=drs)
     sim_us = (time.time() - t0) * 1e6 / len(res)
 
-    base = res[("ASMW", max(drs), models[0] if "resnet50" not in models else "resnet50")]
-    matched_area = {dr: AcceleratorConfig.from_paper("SMWA", dr).total_area_mm2() for dr in drs}
+    base = res[
+        ("ASMW", max(drs), models[0] if "resnet50" not in models else "resnet50")
+    ]
+    matched_area = {
+        dr: AcceleratorConfig.from_paper("SMWA", dr).total_area_mm2() for dr in drs
+    }
 
     print("fig7_system,normalized_to_ASMW_resnet50_10GS")
     print("org,dr_gs,model,norm_fps,norm_fps_per_w,norm_fps_per_w_per_mm2")
     for (org, dr, m), r in sorted(res.items()):
         nf = r.fps / base.fps
         nw = r.fps_per_w / base.fps_per_w
-        na = (r.fps_per_w / matched_area[dr]) / (base.fps_per_w / matched_area[max(drs)])
+        na = (r.fps_per_w / matched_area[dr]) / (
+            base.fps_per_w / matched_area[max(drs)]
+        )
         print(f"{org},{dr},{m},{nf:.3f},{nw:.3f},{na:.3f}")
 
     print("ratios,SMWA_vs_other (gmean over CNNs | max)")

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 
 from repro.core.cnn_workloads import WORKLOADS
 from repro.core.dpu import DPUConfig, photonic_matmul
-from repro.core.organizations import ORGANIZATIONS
+from repro.orgs import ORGANIZATIONS
 from repro.kernels.photonic_gemm.ref import exact_int_gemm
 from repro.kernels.photonic_gemm.ops import photonic_gemm_int
 from repro.noise import build_channel_model
@@ -137,9 +137,7 @@ def workload_gemm_sqnr(n_sweep, max_rows=32, max_cols=64, max_k=512):
                     organization=org, bits=4, dpe_size=n, channel=ch,
                     noise_seed=3,
                 )
-                noisy = np.asarray(
-                    photonic_gemm_int(xq, wq, cfg, backend="ref")
-                )
+                noisy = np.asarray(photonic_gemm_int(xq, wq, cfg, backend="ref"))
                 out[(wname, layer.name, org, n)] = _sqnr_db(gold, noisy)
     return out
 

@@ -49,7 +49,12 @@ def active_params(arch_name: str) -> float:
     walk(defs)
     if cfg.num_experts:
         # routed expert params: stacked wi (E,d,2f) + wo (E,f,d) per MoE layer
-        d, f, e, k = cfg.d_model, cfg.moe_hidden, cfg.num_experts, cfg.num_experts_per_tok
+        d, f, e, k = (
+            cfg.d_model,
+            cfg.moe_hidden,
+            cfg.num_experts,
+            cfg.num_experts_per_tok,
+        )
         n_moe_layers = cfg.num_layers - (1 if (cfg.mla and cfg.num_experts) else 0)
         routed = n_moe_layers * e * 3 * d * f
         total -= routed * (1.0 - k / e)
@@ -94,7 +99,9 @@ def roofline_terms(cell: dict) -> dict | None:
     t_x = wire / TPU_V5E.ici_bandwidth
     credit = flash_credit(cell["arch"], cell["shape"], cell["mesh"])
     t_m_flash = max(byts - credit, 0.0) / TPU_V5E.hbm_bandwidth
-    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x), key=lambda kv: kv[1])
+    dom = max(
+        ("compute", t_c), ("memory", t_m), ("collective", t_x), key=lambda kv: kv[1]
+    )
     bound_flash = max(t_c, t_m_flash, t_x)
     mf = model_flops(cell["arch"], cell["shape"]) / CHIPS[cell["mesh"]]
     return {
@@ -157,7 +164,9 @@ def flash_credit(arch_name: str, shape_name: str, mesh: str) -> float:
         return factor * score_bytes(n_m, t, cfg.ssm_chunk, cfg.num_heads)
     if fam == "hybrid":  # SSD chunk scores + shared attn invocations
         n_groups = cfg.num_layers // cfg.attn_every
-        ssd = score_bytes(cfg.num_layers, t, cfg.ssm_chunk, 1)  # (C.B) per head pair-free
+        ssd = score_bytes(
+            cfg.num_layers, t, cfg.ssm_chunk, 1
+        )  # (C.B) per head pair-free
         attn_b = score_bytes(n_groups, t, t, h_dev)
         return factor * (ssd + attn_b)
     return 0.0
@@ -175,8 +184,10 @@ RECOMMEND = {
 
 def render(write_experiments: bool = False) -> str:
     lines = []
-    lines.append("| arch | shape | FLOPs/dev | compute s | memory s | mem+flash s | collective s | "
-                 "dominant | MFU-UB | UB+flash | useful | note |")
+    lines.append(
+        "| arch | shape | FLOPs/dev | compute s | memory s | mem+flash s "
+        "| collective s | dominant | MFU-UB | UB+flash | useful | note |"
+    )
     lines.append("|---|---|---|---|---|---|---|---|---|---|---|---|")
     incomplete = 0
     for arch in registry.names():
@@ -187,8 +198,10 @@ def render(write_experiments: bool = False) -> str:
                 incomplete += 1
                 continue
             if cell.get("skipped"):
-                lines.append(f"| {arch} | {shape} | — | — | — | — | — | skipped | — | — | — | "
-                             f"{a.notes.split(';')[0][:40]} |")
+                lines.append(
+                    f"| {arch} | {shape} | — | — | — | — | — | skipped "
+                    f"| — | — | — | {a.notes.split(';')[0][:40]} |"
+                )
                 continue
             t = roofline_terms(cell)
             if t is None:

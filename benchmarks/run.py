@@ -31,6 +31,7 @@ def main(argv=None) -> None:
         fig7_system,
         noise_accuracy,
         org_accuracy,
+        org_design_space,
         prepack_decode,
         table5_dpu,
         tp_scaling,
@@ -42,6 +43,7 @@ def main(argv=None) -> None:
         ("fig7_system", fig7_system.main),
         ("noise_accuracy", noise_accuracy.main),
         ("org_accuracy", org_accuracy.main),
+        ("org_design_space", org_design_space.main),
         ("prepack_decode", prepack_decode.main),
         ("tp_scaling", tp_scaling.main),
     ]

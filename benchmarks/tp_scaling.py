@@ -30,9 +30,9 @@ from repro.core.dpu import DPUConfig
 from repro.launch import mesh as mesh_mod
 from repro.models.common import ModelConfig, dense
 from repro.noise import build_channel_model, shard_local_channel
+from repro.orgs import ORGANIZATIONS as ORGS
 from repro.photonic import engine_for, prepack_params, tensor_parallel
 
-ORGS = ("ASMW", "MASW", "SMWA")
 BITS = 4
 
 

@@ -27,8 +27,10 @@ def main():
         mark = "==" if n == n_paper else f"ours {n}"
         exact += n == n_paper
         print(f"  {org} @ {dr:>2} GS/s: paper N={n_paper:>3}   {mark}")
-    print(f"  -> {exact}/9 cells exact, calibration residual "
-          f"{sc.calibration().mean_abs_rel_err:.1%} mean abs")
+    print(
+        f"  -> {exact}/9 cells exact, calibration residual "
+        f"{sc.calibration().mean_abs_rel_err:.1%} mean abs"
+    )
 
     print()
     print("=" * 72)
@@ -40,14 +42,21 @@ def main():
     for dr in (1, 5, 10):
         for other in ("ASMW", "MASW"):
             r = [res[("SMWA", dr, m)].fps / res[(other, dr, m)].fps for m in MODELS]
-            print(f"  FPS SMWA/{other} @ {dr:>2} GS/s: ours g{gmean(r):.2f}/max{max(r):.2f}"
-                  f"   paper 'up to' {paper_fps[(dr, other)]}x")
+            print(
+                f"  FPS SMWA/{other} @ {dr:>2} GS/s: "
+                f"ours g{gmean(r):.2f}/max{max(r):.2f}"
+                f"   paper 'up to' {paper_fps[(dr, other)]}x"
+            )
     # Trend checks the paper asserts:
     f = lambda o, dr: res[(o, dr, "resnet50")].fps  # noqa: E731
-    print("\n  trends: FPS decreases with DR for every org:",
-          all(f(o, 1) > f(o, 5) > f(o, 10) for o in ("ASMW", "MASW", "SMWA")))
-    print("  trends: MASW slightly beats ASMW everywhere:",
-          all(f("MASW", d) >= f("ASMW", d) for d in (1, 5, 10)))
+    print(
+        "\n  trends: FPS decreases with DR for every org:",
+        all(f(o, 1) > f(o, 5) > f(o, 10) for o in ("ASMW", "MASW", "SMWA")),
+    )
+    print(
+        "  trends: MASW slightly beats ASMW everywhere:",
+        all(f("MASW", d) >= f("ASMW", d) for d in (1, 5, 10)),
+    )
 
 
 if __name__ == "__main__":

@@ -32,38 +32,48 @@ def main():
     exact = x @ w
 
     cfg = DPUConfig(organization="SMWA", bits=4, datarate_gs=5.0)
-    print(f"  operating point: N={cfg.n}, M={cfg.m}, "
-          f"{cfg.num_slices} slices x {cfg.num_slices} = {cfg.passes} passes, "
-          f"{cfg.num_chunks(256)} psum chunks for k=256")
+    print(
+        f"  operating point: N={cfg.n}, M={cfg.m}, "
+        f"{cfg.num_slices} slices x {cfg.num_slices} = {cfg.passes} passes, "
+        f"{cfg.num_chunks(256)} psum chunks for k=256"
+    )
     y = photonic_matmul(x, w, cfg)
     rel = float(jnp.linalg.norm(y - exact) / jnp.linalg.norm(exact))
     print(f"  ideal datapath rel-error vs float GEMM: {rel:.4f} (int8 quantization)")
 
     y_pallas = photonic_gemm(x, w, cfg, "pallas")  # interpret mode on CPU
-    print(f"  pallas kernel == ref: "
-          f"{bool(jnp.allclose(y_pallas, photonic_gemm(x, w, cfg, 'ref')))}")
+    print(
+        f"  pallas kernel == ref: "
+        f"{bool(jnp.allclose(y_pallas, photonic_gemm(x, w, cfg, 'ref')))}"
+    )
 
     print("\n=== 3. analog noise at the scalability budget ===")
     for mult in (1.0, 4.0):
         sigma = mult * noise_sigma_from_snr(cfg)
-        ncfg = DPUConfig(organization="SMWA", bits=4, datarate_gs=5.0,
-                         noise_sigma_lsb=sigma)
+        ncfg = DPUConfig(
+            organization="SMWA", bits=4, datarate_gs=5.0, noise_sigma_lsb=sigma
+        )
         yn = photonic_matmul(x, w, ncfg, prng_key=jax.random.PRNGKey(0))
         rel = float(jnp.linalg.norm(yn - exact) / jnp.linalg.norm(exact))
-        print(f"  noise {mult:>3.0f}x budget (sigma={sigma:.1f} LSB): rel-error {rel:.4f}")
+        print(
+            f"  noise {mult:>3.0f}x budget (sigma={sigma:.1f} LSB): rel-error {rel:.4f}"
+        )
 
     print("\n=== 4. the organization-aware channel model (repro.noise) ===")
     for org in ("ASMW", "MASW", "SMWA"):
         ch = build_channel_model(org, n=17, bits=4, datarate_gs=5.0)
-        ocfg = DPUConfig(organization=org, bits=4, dpe_size=17,
-                         channel=ch, noise_seed=0)
+        ocfg = DPUConfig(
+            organization=org, bits=4, dpe_size=17, channel=ch, noise_seed=0
+        )
         yo = photonic_matmul(x, w, ocfg)
         rel = float(jnp.linalg.norm(yo - exact) / jnp.linalg.norm(exact))
-        print(f"  {org}: through-loss {ch.through_loss_db:.2f} dB, "
-              f"sigma {ch.detector_sigma_lsb:.1f} LSB, "
-              f"xtalk (im/cw/filt) = ({ch.intermod_eps:.3f}/"
-              f"{ch.crossweight_eps:.3f}/{ch.filter_alpha:.3f}) "
-              f"-> rel-error {rel:.4f}")
+        print(
+            f"  {org}: through-loss {ch.through_loss_db:.2f} dB, "
+            f"sigma {ch.detector_sigma_lsb:.1f} LSB, "
+            f"xtalk (im/cw/filt) = ({ch.intermod_eps:.3f}/"
+            f"{ch.crossweight_eps:.3f}/{ch.filter_alpha:.3f}) "
+            f"-> rel-error {rel:.4f}"
+        )
 
     print("\n=== 5. the execution engine: prepacked weight-stationary GEMM ===")
     from repro.photonic import engine_for, pack_dense  # noqa: E402
@@ -73,12 +83,16 @@ def main():
     packed = pack_dense({"w": w}, eng)["w"]
     y_pack = eng.matmul(x, packed, site="demo")
     y_call = eng.matmul_float(x, w, site="demo")
-    print(f"  prepacked == per-call quantization: "
-          f"{bool(jnp.array_equal(y_pack, y_call))}  ({packed})")
-    print("  routing policy: "
-          f"routes('ffn.wi')={eng.routes('ffn.wi')}, "
-          f"routes('ffn.router')={eng.routes('ffn.router')} "
-          "(MoE routing stays digital by default)")
+    print(
+        f"  prepacked == per-call quantization: "
+        f"{bool(jnp.array_equal(y_pack, y_call))}  ({packed})"
+    )
+    print(
+        "  routing policy: "
+        f"routes('ffn.wi')={eng.routes('ffn.wi')}, "
+        f"routes('ffn.router')={eng.routes('ffn.router')} "
+        "(MoE routing stays digital by default)"
+    )
 
 
 if __name__ == "__main__":

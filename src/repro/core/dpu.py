@@ -47,6 +47,7 @@ import jax.numpy as jnp
 
 from repro.core import scalability
 from repro.core.params import PhotonicParams
+from repro.orgs import OrgSpec, resolve
 from repro.noise.channel import (
     ChannelModel,
     analog_pass_psums,
@@ -62,9 +63,16 @@ from repro.noise.stages import (
 
 @dataclasses.dataclass(frozen=True)
 class DPUConfig:
-    """Operating point of a photonic DPU (organization + precision + rate)."""
+    """Operating point of a photonic DPU (organization + precision + rate).
 
-    organization: str = "SMWA"
+    ``organization`` accepts a name ("SMWA", case-insensitive), a
+    four-letter block-order string ("MWAS"), or a typed
+    :class:`repro.orgs.OrgSpec`; it is validated eagerly and stored as
+    the canonical order name (unknown orders raise ``ValueError`` naming
+    the valid choices instead of a late ``KeyError``).
+    """
+
+    organization: "str | OrgSpec" = "SMWA"
     bits: int = 4              # analog precision B per pass
     operand_bits: int = 8      # digital operand precision (paper: int8 CNNs)
     datarate_gs: float = 5.0   # symbol rate [GS/s]
@@ -78,13 +86,22 @@ class DPUConfig:
     # (the documented deterministic path; see module docstring).
     noise_seed: Optional[int] = None
 
+    def __post_init__(self):
+        # One resolution point (repro.orgs.resolve): eager validation, one
+        # normalization.  Storing the canonical name keeps the config's
+        # repr/equality/hash identical to the historical string form.
+        object.__setattr__(self, "organization", resolve(self.organization).name)
+
+    @property
+    def org_spec(self) -> OrgSpec:
+        """The typed organization spec this config runs (repro.orgs)."""
+        return resolve(self.organization)
+
     @property
     def n(self) -> int:
         if self.dpe_size is not None:
             return self.dpe_size
-        n = scalability.calibrated_max_n(
-            self.organization, self.bits, self.datarate_gs
-        )
+        n = scalability.calibrated_max_n(self.organization, self.bits, self.datarate_gs)
         if n <= 0:
             raise ValueError(
                 f"infeasible operating point: {self.organization} B={self.bits} "
@@ -264,9 +281,7 @@ def dpu_int_gemm(
     if analog and channel.detector_sigma_lsb > 0.0:
         # Operand-content tweak decorrelates same-seed, same-shape calls
         # (layers of one model / QAT steps) without losing determinism.
-        seed = data_tweak(
-            cfg.noise_seed_array(prng_key, what="detector noise"), xq, wq
-        )
+        seed = data_tweak(cfg.noise_seed_array(prng_key, what="detector noise"), xq, wq)
 
     # psum chunking of the contraction dimension (electronic reduction).
     xq = _pad_to(xq, 1, n)

@@ -10,98 +10,76 @@ optical-channel manipulation blocks appear:
 * **SMWA** — Splitting, Modulation, Weighting, Aggregation ("hitless")
   (Hitless, ADEPT, Albireo)
 
-Each organization incurs a different set of crosstalk effects (Table II) and
-optical losses (Table III), composing into the per-organization network
-penalty ``P_penalty`` of Table IV.  This module encodes those tables
-declaratively and provides both the paper's *lumped* penalty (used by Eq. 3 /
-Table V) and a *structural* per-effect decomposition used by the circuit-level
-analysis benchmark.
+Since PR 5 the block order itself is the API: :mod:`repro.orgs` defines the
+typed :class:`~repro.orgs.OrgSpec` whose crosstalk (Table II), loss
+structure (Table III), and lumped penalty (Table IV) are *derived* from the
+order by structural rules (DESIGN.md §11) instead of looked up.  This
+module keeps the historical table-shaped views — ``CROSSTALK`` / ``LOSSES``
+/ ``BLOCK_ORDERS`` / ``through_device_count`` — as thin projections of the
+derived profiles (tested equal to the paper tables in
+``tests/test_orgs.py``), plus the structural penalty decomposition used by
+the circuit-level analysis benchmark.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Tuple
+from typing import Callable, Dict, Iterator, Mapping, Union
 
+from repro import orgs
 from repro.core.params import PhotonicParams
+from repro.orgs import (  # noqa: F401  (re-exported compatibility surface)
+    AGG,
+    EFFECT_BUDGET_DB,
+    MOD,
+    ORGANIZATIONS,
+    SPLIT,
+    SUM,
+    WEIGHT,
+    CrosstalkProfile,
+    LossProfile,
+    OrgSpec,
+)
 
-# Block symbols
-SPLIT, AGG, MOD, WEIGHT, SUM = "S", "A", "M", "W", "Sigma"
+class _RegistryView(Mapping):
+    """Live name-keyed view over the org registry (one projected field per
+    spec).  A mapping rather than a dict snapshot so organizations added
+    via :func:`repro.orgs.register` after import appear here too."""
 
-BLOCK_ORDERS: Dict[str, Tuple[str, ...]] = {
-    "ASMW": (AGG, SPLIT, MOD, WEIGHT, SUM),
-    "MASW": (MOD, AGG, SPLIT, WEIGHT, SUM),
-    "SMWA": (SPLIT, MOD, WEIGHT, AGG, SUM),
-}
+    def __init__(self, project: Callable[[OrgSpec], object]):
+        self._project = project
+
+    def __getitem__(self, name: str):
+        return self._project(orgs.registered()[name])
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(orgs.registered())
+
+    def __len__(self) -> int:
+        return len(orgs.registered())
+
+    def __repr__(self) -> str:
+        return repr(dict(self))
+
+
+BLOCK_ORDERS: Mapping[str, tuple] = _RegistryView(lambda s: s.blocks)
 
 # Prior-work classification (paper Table I).
-PRIOR_WORK: Dict[str, Tuple[str, ...]] = {
-    "ASMW": ("Crosslight", "DEAP-CNN", "Robin", "RAMM"),
-    "MASW": ("Holylight", "Yang", "Al-Qadasi", "PCNNA", "RMAM"),
-    "SMWA": ("Hitless", "ADEPT", "Albireo"),
-}
+PRIOR_WORK: Mapping[str, tuple] = _RegistryView(orgs.prior_work)
+
+# Table II / Table III, derived from the block orders (asserted equal to the
+# paper's hand-tabulated values in tests/test_orgs.py).
+CROSSTALK: Mapping[str, CrosstalkProfile] = _RegistryView(lambda s: s.crosstalk)
+
+LOSSES: Mapping[str, LossProfile] = _RegistryView(lambda s: s.losses)
 
 
-@dataclasses.dataclass(frozen=True)
-class CrosstalkProfile:
-    """Which crosstalk effects are present (paper Table II)."""
-
-    inter_modulation: bool
-    cross_weight: bool
-    filter_truncation: bool
-
-
-@dataclasses.dataclass(frozen=True)
-class LossProfile:
-    """Qualitative loss levels (paper Table III) + structural device counts."""
-
-    through_loss_level: str      # "high" | "moderate" | "low"
-    propagation_loss_level: str  # "high" | "moderate" | "low"
-    # Number of out-of-resonance devices traversed by a channel before the
-    # BPD, as a function of DPE size N (paper §IV-B1).
-    #   ASMW: 2(N-1)   MASW: N   SMWA: 2
-    through_devices: str         # formula id: "2(N-1)" | "N" | "2"
-    # Relative waveguide-length factor for propagation loss (SMWA uses more,
-    # longer waveguides because of its hitless N*M layout; MASW shares one
-    # input array).  Multiplies N * d_mrr in the structural model.
-    waveguide_length_factor: float
-
-
-CROSSTALK: Dict[str, CrosstalkProfile] = {
-    "ASMW": CrosstalkProfile(True, True, False),
-    "MASW": CrosstalkProfile(False, True, True),
-    "SMWA": CrosstalkProfile(False, False, True),
-}
-
-LOSSES: Dict[str, LossProfile] = {
-    "ASMW": LossProfile("high", "moderate", "2(N-1)", 1.0),
-    "MASW": LossProfile("moderate", "low", "N", 0.75),
-    "SMWA": LossProfile("high", "high", "2", 1.5),
-}
-
-# Optimistic per-effect budgets assumed by the paper (§IV-C) when composing
-# P_penalty: inter-modulation <= 1 dB, cross-weight <= 3 dB, filter < 0.5 dB.
-EFFECT_BUDGET_DB = {
-    "inter_modulation": 1.0,
-    "cross_weight": 3.0,
-    "filter_truncation": 0.5,
-}
-
-
-def through_device_count(organization: str, n: int) -> int:
+def through_device_count(organization: Union[str, OrgSpec], n: int) -> int:
     """Out-of-resonance devices traversed by one channel (paper §IV-B1)."""
-    org = organization.upper()
-    if org == "ASMW":
-        return 2 * (n - 1)
-    if org == "MASW":
-        return n
-    if org == "SMWA":
-        return 2
-    raise ValueError(f"unknown organization {organization!r}")
+    return orgs.resolve(organization).through_device_count(n)
 
 
 def structural_penalty_db(
-    organization: str,
+    organization: Union[str, OrgSpec],
     n: int,
     params: PhotonicParams,
 ) -> Dict[str, float]:
@@ -114,29 +92,32 @@ def structural_penalty_db(
     penalty comes from.  ``sum(values)`` approximates Table IV's lumped value
     at the paper's operating point.
     """
-    org = organization.upper()
-    xt = CROSSTALK[org]
-    loss = LOSSES[org]
+    spec = orgs.resolve(organization)
     parts = {
-        "inter_modulation": EFFECT_BUDGET_DB["inter_modulation"] if xt.inter_modulation else 0.0,
-        "cross_weight": EFFECT_BUDGET_DB["cross_weight"] if xt.cross_weight else 0.0,
-        "filter_truncation": EFFECT_BUDGET_DB["filter_truncation"] if xt.filter_truncation else 0.0,
+        "inter_modulation": (
+            EFFECT_BUDGET_DB["inter_modulation"] if spec.inter_modulation else 0.0
+        ),
+        "cross_weight": (
+            EFFECT_BUDGET_DB["cross_weight"] if spec.cross_weight else 0.0
+        ),
+        "filter_truncation": (
+            EFFECT_BUDGET_DB["filter_truncation"] if spec.filter_truncation else 0.0
+        ),
         # Propagation beyond the per-ring term already in Eq. 3: scaled by the
         # organization's extra waveguide length.
         "propagation": params.p_si_att_db_per_mm
-        * loss.waveguide_length_factor
+        * spec.waveguide_length_factor
         * n
         * params.d_mrr_mm,
         # Through-loss differential vs the generic (N-1)+(N-1) terms of Eq.3.
-        "through_delta": (through_device_count(org, n) - 2 * (n - 1))
+        "through_delta": (spec.through_device_count(n) - 2 * (n - 1))
         * params.p_mrm_obl_db,
     }
     return parts
 
 
-def lumped_penalty_db(organization: str, params: PhotonicParams) -> float:
+def lumped_penalty_db(
+    organization: Union[str, OrgSpec], params: PhotonicParams
+) -> float:
     """The paper's Table IV P_penalty — what Eq. 3 / Table V actually use."""
     return params.penalty_db(organization)
-
-
-ORGANIZATIONS = ("ASMW", "MASW", "SMWA")

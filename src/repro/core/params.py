@@ -85,12 +85,27 @@ class PhotonicParams:
         """Max WDM channel count allowed by the FSR (paper: 200)."""
         return int(round(self.fsr_nm / self.channel_spacing_nm))
 
-    def penalty_db(self, organization: str) -> float:
-        return {
+    def penalty_db(self, organization) -> float:
+        """Lumped network penalty P_penalty for an organization (Table IV).
+
+        Accepts ``str | OrgSpec`` (resolved via :func:`repro.orgs.resolve`).
+        The three paper-studied orders read the explicit Table IV fields
+        above (so ``dataclasses.replace`` ablations keep working); any
+        other valid ordering falls back to the structurally derived
+        penalty — which, at the default anchors, reproduces the same
+        values for ASMW / MASW / SMWA (see DESIGN.md §11).
+        """
+        from repro.orgs import resolve
+
+        spec = resolve(organization)
+        overrides = {
             "ASMW": self.penalty_asmw_db,
             "MASW": self.penalty_masw_db,
             "SMWA": self.penalty_smwa_db,
-        }[organization.upper()]
+        }
+        if spec.name in overrides:
+            return overrides[spec.name]
+        return spec.derived_penalty_db
 
 
 # ---------------------------------------------------------------------------

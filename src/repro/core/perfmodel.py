@@ -14,6 +14,7 @@ from typing import Dict
 
 from repro.core import scalability
 from repro.core.params import DEFAULT_PERIPHERALS, PeripheralParams, dbm_to_watts
+from repro.orgs import OrgSpec, resolve
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,6 +28,17 @@ class AcceleratorConfig:
     dpu_count: int = 50
     dpus_per_tile: int = 4
     peripherals: PeripheralParams = DEFAULT_PERIPHERALS
+
+    def __post_init__(self):
+        # Eager organization validation + case normalization: accept
+        # str | OrgSpec, store the canonical name (unknown orders raise
+        # ValueError naming the valid choices — repro.orgs.resolve).
+        object.__setattr__(self, "organization", resolve(self.organization).name)
+
+    @property
+    def org_spec(self) -> OrgSpec:
+        """The typed organization spec this config runs (repro.orgs)."""
+        return resolve(self.organization)
 
     @property
     def symbol_s(self) -> float:
@@ -58,14 +70,11 @@ class AcceleratorConfig:
     # ---- organization-dependent ring counts per DPU (Fig. 2) --------------
     @property
     def rings_per_dpu(self) -> int:
-        n, m = self.n, self.m
-        org = self.organization.upper()
-        if org == "ASMW":   # M waveguides x (N MRM + N MRR)
-            return 2 * n * m
-        if org == "MASW":   # shared N-MRM input array + M x N weight MRRs
-            return n + n * m
-        # SMWA: N*M MRM + N*M MRR + M x (N-ring mux)
-        return 3 * n * m
+        # Derived from the block order (repro.orgs rule set; reproduces the
+        # legacy Fig. 2 counts — ASMW: M waveguides x (N MRM + N MRR) = 2NM,
+        # MASW: shared N-MRM input array + M x N weight MRRs = N + NM,
+        # SMWA: N*M MRM + N*M MRR + M x (N-ring mux) = 3NM).
+        return self.org_spec.rings_per_dpu(self.n, self.m)
 
     @property
     def dacs_per_dpu(self) -> int:
@@ -120,11 +129,7 @@ class AcceleratorConfig:
             + p.bus.power_w
             + p.router.power_w
         )
-        return (
-            self.tiles * per_tile
-            + p.io_interface.power_w
-            + self.laser_power_w()
-        )
+        return (self.tiles * per_tile + p.io_interface.power_w + self.laser_power_w())
 
     def streaming_power_w(self) -> float:
         """DAC+ADC power while a DPU streams symbols."""
@@ -134,13 +139,24 @@ class AcceleratorConfig:
 
     # ---- convenience -------------------------------------------------------
     @staticmethod
-    def from_paper(organization: str, datarate_gs: float) -> "AcceleratorConfig":
-        """Operating point from Table V (B=4)."""
-        key = (organization.upper(), int(datarate_gs))
+    def from_paper(
+        organization: "str | OrgSpec", datarate_gs: float
+    ) -> "AcceleratorConfig":
+        """Operating point from Table V (B=4; paper-studied orders only)."""
+        spec = resolve(organization)
+        key = (spec.name, int(datarate_gs))
+        if key not in scalability.TABLE_V_N:
+            raise ValueError(
+                f"no Table V operating point for {spec.name!r} at "
+                f"{datarate_gs} GS/s — the paper tabulates "
+                f"{sorted({k[0] for k in scalability.TABLE_V_N})} at DR in "
+                f"{sorted({k[1] for k in scalability.TABLE_V_N})}; use "
+                "from_scalability() for unstudied orderings"
+            )
         n = scalability.TABLE_V_N[key]
         count = scalability.TABLE_V_COUNT[key]
         return AcceleratorConfig(
-            organization=organization.upper(),
+            organization=spec.name,
             datarate_gs=datarate_gs,
             n=n,
             m=n,
@@ -149,12 +165,17 @@ class AcceleratorConfig:
 
     @staticmethod
     def from_scalability(
-        organization: str, datarate_gs: float, bits: int = 4, dpu_count: int = 50
+        organization: "str | OrgSpec",
+        datarate_gs: float,
+        bits: int = 4,
+        dpu_count: int = 50,
     ) -> "AcceleratorConfig":
-        """Operating point from OUR calibrated solver (cross-check path)."""
-        n = scalability.calibrated_max_n(organization, bits, datarate_gs)
+        """Operating point from OUR calibrated solver (works for any valid
+        ordering, studied or not — the design-space benchmark's path)."""
+        spec = resolve(organization)
+        n = scalability.calibrated_max_n(spec, bits, datarate_gs)
         return AcceleratorConfig(
-            organization=organization.upper(),
+            organization=spec.name,
             datarate_gs=datarate_gs,
             bits=bits,
             n=n,
@@ -163,7 +184,23 @@ class AcceleratorConfig:
         )
 
 
-def area_matched_counts(datarate_gs: float, base: AcceleratorConfig | None = None) -> Dict[str, int]:
+def area_matched_count(cfg: AcceleratorConfig, target_area_mm2: float) -> int:
+    """Largest ``dpu_count`` keeping ``cfg`` within ``target_area_mm2``
+    (the paper's area-proportionate matching, generalized to any ordering
+    for the design-space sweep)."""
+    lo, hi = 1, 100000
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if dataclasses.replace(cfg, dpu_count=mid).total_area_mm2() <= target_area_mm2:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def area_matched_counts(
+    datarate_gs: float, base: AcceleratorConfig | None = None
+) -> Dict[str, int]:
     """Our area model's DPU counts matching SMWA's area (cross-check of the
     paper's area-proportionate analysis, Table V bottom rows)."""
     base = base or AcceleratorConfig.from_paper("SMWA", datarate_gs)
@@ -171,12 +208,5 @@ def area_matched_counts(datarate_gs: float, base: AcceleratorConfig | None = Non
     out = {"SMWA": base.dpu_count}
     for org in ("ASMW", "MASW"):
         cfg = AcceleratorConfig.from_paper(org, datarate_gs)
-        lo, hi = 1, 100000
-        while lo < hi:
-            mid = (lo + hi + 1) // 2
-            if dataclasses.replace(cfg, dpu_count=mid).total_area_mm2() <= target:
-                lo = mid
-            else:
-                hi = mid - 1
-        out[org] = lo
+        out[org] = area_matched_count(cfg, target)
     return out

@@ -28,6 +28,7 @@ from repro.core.params import (
     Q_ELECTRON,
     watts_to_dbm,
 )
+from repro.orgs import ORGANIZATIONS, OrgSpec, resolve
 
 # Paper Table V — DPU size N at 4-bit precision (targets for calibration /
 # validation).  Keys: (organization, datarate in GS/s) -> N.
@@ -125,11 +126,12 @@ def bits_supported(
 def output_power_dbm(
     n: int,
     m: int,
-    organization: str,
+    organization: "str | OrgSpec",
     params: PhotonicParams,
     *,
     org_aware_through: bool = True,
 ) -> float:
+    spec = resolve(organization)
     p = params.p_laser_dbm
     p -= params.p_smf_att_db
     p -= params.p_ec_il_db
@@ -138,17 +140,16 @@ def output_power_dbm(
     p -= params.p_splitter_il_db * math.log2(max(m, 2))
     p -= params.p_mrr_w_il_db
     if org_aware_through:
-        # Structural through loss (paper §IV-B1 / Table III): a channel passes
-        # 2(N-1) out-of-resonance rings in ASMW, N in MASW, only 2 in SMWA.
-        from repro.core.organizations import through_device_count
-
-        p -= through_device_count(organization, n) * params.p_mrm_obl_db
+        # Structural through loss (paper §IV-B1 / Table III, derived from
+        # the block order): a channel passes 2(N-1) out-of-resonance rings
+        # in ASMW, N in MASW, only 2 in SMWA.
+        p -= spec.through_device_count(n) * params.p_mrm_obl_db
     else:
         # Eq. 3 exactly as printed (organization differences lumped in
         # P_penalty only).
         p -= (n - 1) * params.p_mrm_obl_db
         p -= (n - 1) * params.p_mrr_w_obl_db
-    p -= params.penalty_db(organization)
+    p -= params.penalty_db(spec)
     p -= 10.0 * math.log10(n)  # 1:M fan-out power split (M = N)
     return p
 
@@ -157,7 +158,7 @@ def output_power_dbm(
 # Achievable DPU size N (Fig. 5 / Table V)
 # ---------------------------------------------------------------------------
 def max_dpu_size(
-    organization: str,
+    organization: "str | OrgSpec",
     bits: float,
     datarate_gs: float,
     params: PhotonicParams,
@@ -166,6 +167,7 @@ def max_dpu_size(
     org_aware_through: bool = True,
 ) -> int:
     """Largest N (= M) whose delivered power meets the PD sensitivity."""
+    organization = resolve(organization)
     p_pd = pd_sensitivity_watts(
         bits, datarate_gs * 1e9, params, snr_margin_db=snr_margin_db
     )
@@ -192,13 +194,13 @@ def scalability_table(
     *,
     bits: Iterable[int] = range(1, 9),
     datarates_gs: Iterable[float] = (1, 5, 10),
-    organizations: Iterable[str] = ("ASMW", "MASW", "SMWA"),
+    organizations: "Iterable[str | OrgSpec]" = ORGANIZATIONS,
     snr_margin_db: float = 0.0,
 ) -> Dict[Tuple[str, float, int], int]:
-    """Fig. 5 — N for every (organization, DR, B)."""
+    """Fig. 5 — N for every (organization, DR, B); keyed by canonical name."""
     out = {}
     for org, dr, b in itertools.product(organizations, datarates_gs, bits):
-        out[(org, dr, b)] = max_dpu_size(
+        out[(resolve(org).name, dr, b)] = max_dpu_size(
             org, b, dr, params, snr_margin_db=snr_margin_db
         )
     return out
@@ -260,7 +262,9 @@ def calibration() -> CalibrationResult:
     return _CALIBRATION
 
 
-def calibrated_max_n(organization: str, bits: float, datarate_gs: float) -> int:
+def calibrated_max_n(
+    organization: "str | OrgSpec", bits: float, datarate_gs: float
+) -> int:
     """Achievable DPU size N at the calibrated operating point."""
     return max_dpu_size(
         organization,

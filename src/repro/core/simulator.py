@@ -32,6 +32,7 @@ from typing import Dict, List
 
 from repro.core.cnn_workloads import WORKLOADS, GemmLayer
 from repro.core.perfmodel import AcceleratorConfig
+from repro.orgs import ORGANIZATIONS, resolve
 
 
 @dataclasses.dataclass
@@ -134,9 +135,13 @@ def _simulate_layer(layer: GemmLayer, cfg: AcceleratorConfig) -> LayerStats:
     # --- energy -------------------------------------------------------------
     stream_energy = busy_s * cfg.streaming_power_w()
     tune_energy = n_tiles * (
-        cfg.tune_power_w_per_ring * tune * (cfg.n * cfg.m if layer.groups == 1 else cfg.m)
+        cfg.tune_power_w_per_ring * tune * (
+            cfg.n * cfg.m if layer.groups == 1 else cfg.m
+        )
     )
-    red_energy = reductions * p.reduction_network.power_w * p.reduction_network.latency_s
+    red_energy = (
+        reductions * p.reduction_network.power_w * p.reduction_network.latency_s
+    )
     # psum + activation movement: eDRAM write/read + bus per psum word
     mem_energy = total_psums * (
         p.edram.power_w * p.edram.latency_s + p.bus.power_w * p.bus.latency_s / cfg.m
@@ -171,14 +176,20 @@ def simulate(model: str, cfg: AcceleratorConfig) -> SimResult:
 
 
 def evaluate_all(
-    organizations=("ASMW", "MASW", "SMWA"),
+    organizations=ORGANIZATIONS,
     datarates=(1, 5, 10),
     models=tuple(WORKLOADS),
     use_paper_operating_points: bool = True,
 ) -> Dict:
-    """Fig. 7 sweep: (org x DR x CNN) -> SimResult."""
+    """Fig. 7 sweep: (org x DR x CNN) -> SimResult.
+
+    ``organizations`` accepts ``str | OrgSpec`` entries; results are keyed
+    by the canonical order name.  Unstudied orderings require
+    ``use_paper_operating_points=False`` (no Table V entry to read).
+    """
     out = {}
     for org in organizations:
+        name = resolve(org).name
         for dr in datarates:
             cfg = (
                 AcceleratorConfig.from_paper(org, dr)
@@ -186,5 +197,5 @@ def evaluate_all(
                 else AcceleratorConfig.from_scalability(org, dr)
             )
             for m in models:
-                out[(org, dr, m)] = simulate(m, cfg)
+                out[(name, dr, m)] = simulate(m, cfg)
     return out

@@ -123,8 +123,12 @@ def flash_attention_pallas(
         grid=(b, h, tq // bq, n_k),
         in_specs=[
             pl.BlockSpec((1, 1, bq, hd), lambda bb, hh, iq, kk: (bb, hh, iq, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda bb, hh, iq, kk: (bb, hh // n_rep, kk, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda bb, hh, iq, kk: (bb, hh // n_rep, kk, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, hd), lambda bb, hh, iq, kk: (bb, hh // n_rep, kk, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, hd), lambda bb, hh, iq, kk: (bb, hh // n_rep, kk, 0)
+            ),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, hd), lambda bb, hh, iq, kk: (bb, hh, iq, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, tq, hd), q.dtype),

@@ -148,9 +148,7 @@ def _kernel(
                                 # data and fire no optical pass — mask their
                                 # noise so variance matches the oracle.
                                 gchunk = pl.program_id(2) * chunks + g
-                                z = z * (gchunk < valid_chunks).astype(
-                                    jnp.float32
-                                )
+                                z = z * (gchunk < valid_chunks).astype(jnp.float32)
                             a = a + noise_sigma * z
                         psum = jnp.round(a).astype(jnp.int32)
                     if lim is not None:

@@ -43,6 +43,7 @@ def run_cell(
     *,
     photonic: bool = False,
     photonic_scope: str = "weights",
+    photonic_org: str = "SMWA",  # str | OrgSpec; validated by DPUConfig
     save_hlo: bool = False,
     overrides: dict | None = None,
     variant: str = "base",
@@ -74,7 +75,9 @@ def run_cell(
     if photonic:
         cfg = dataclasses.replace(
             cfg,
-            photonic=DPUConfig(organization="SMWA", bits=4, datarate_gs=5.0),
+            photonic=DPUConfig(
+                organization=photonic_org, bits=4, datarate_gs=5.0
+            ),
             photonic_backend="ref",
             photonic_scope=photonic_scope,
         )
@@ -149,7 +152,9 @@ def run_cell(
             for ax in ("pod", "data"):
                 dp_degree *= mesh.shape.get(ax, 1)
             moment_axes = shd.zero1_axes(baxes, bsds, dp_degree) if zero1 else baxes
-            opt_sh = shd.tree_shardings(mesh, opt_sds, adamw.opt_state_axes(moment_axes))
+            opt_sh = shd.tree_shardings(
+                mesh, opt_sds, adamw.opt_state_axes(moment_axes)
+            )
             batch_sds, batch_axes = arch.train_batch_spec(bcfg, shape)
             batch_sh = shd.tree_shardings(mesh, batch_sds, batch_axes)
 
@@ -185,7 +190,9 @@ def run_cell(
             jitted = jax.jit(prefill_step, in_shardings=(p_sh, batch_sh))
             args = (bsds, batch_sds)
         else:  # decode
-            (tok_sds, tok_axes), (cache_sds, cache_axes) = arch.decode_specs(bcfg, shape)
+            (tok_sds, tok_axes), (cache_sds, cache_axes) = arch.decode_specs(
+                bcfg, shape
+            )
             tok_sh = shd.tree_shardings(mesh, tok_sds, tok_axes)
             cache_sh = shd.tree_shardings(mesh, cache_sds, cache_axes)
 
@@ -212,7 +219,13 @@ def run_cell(
             out["compile_s"] = round(time.time() - t0, 2)
 
         out["sharding_fallbacks"] = [
-            {"shape": list(s), "logical": n, "mesh_axis": str(a), "dim": d, "axis_size": z}
+            {
+                "shape": list(s),
+                "logical": n,
+                "mesh_axis": str(a),
+                "dim": d,
+                "axis_size": z,
+            }
             for (s, n, a, d, z) in shd.fallback_log()
         ]
 
@@ -254,7 +267,9 @@ def run_cell(
                 "dot_bytes": dot_b,
             }
             flops_total += coeff * (lca.get("flops") or 0.0)
-            bytes_total += coeff * (lca.get("bytes") or lca.get("bytes accessed") or 0.0)
+            bytes_total += coeff * (
+                lca.get("bytes") or lca.get("bytes accessed") or 0.0
+            )
             dot_total += coeff * dot_b
         out["ladder"] = ladder_steps
         out["flops_per_device_exact"] = flops_total
@@ -268,7 +283,9 @@ def run_cell(
         out["ladder_error"] = traceback.format_exc()[-3000:]
     if save_hlo and not skip_main:
         HLO_DIR.mkdir(parents=True, exist_ok=True)
-        p = HLO_DIR / (_cell_path(arch_name, shape_name, mesh_kind, variant).stem + ".hlo.gz")
+        p = HLO_DIR / (
+            _cell_path(arch_name, shape_name, mesh_kind, variant).stem + ".hlo.gz"
+        )
         with gzip.open(p, "wt") as f:
             f.write(hlo)
         out["hlo_path"] = str(p)
@@ -359,17 +376,33 @@ def annotate_sweep(timeout_s: int = 3600):
     todo = []
     for p in sorted(RESULTS_DIR.glob("*__base.json")):
         d = json.loads(p.read_text())
-        if d.get("ok") and not d.get("skipped") and "dot_bytes_per_device_exact" not in d:
+        if (
+            d.get("ok")
+            and not d.get("skipped")
+            and "dot_bytes_per_device_exact" not in d
+        ):
             todo.append((d["arch"], d["shape"], d["mesh"]))
     print(f"[annotate] {len(todo)} cells", flush=True)
     for i, (arch, shp, mesh) in enumerate(todo):
         print(f"[annotate {i+1}/{len(todo)}] {arch} x {shp} x {mesh}", flush=True)
-        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
-               "--shape", shp, "--mesh", mesh, "--annotate-cell"]
+        cmd = [
+            sys.executable,
+            "-m",
+            "repro.launch.dryrun",
+            "--arch",
+            arch,
+            "--shape",
+            shp,
+            "--mesh",
+            mesh,
+            "--annotate-cell",
+        ]
         try:
             r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout_s)
-            print("  ok" if r.returncode == 0 else f"  FAILED: {(r.stderr or '')[-300:]}",
-                  flush=True)
+            print(
+                "  ok" if r.returncode == 0 else f"  FAILED: {(r.stderr or '')[-300:]}",
+                flush=True,
+            )
         except subprocess.TimeoutExpired:
             print("  TIMEOUT", flush=True)
 
@@ -377,26 +410,50 @@ def annotate_sweep(timeout_s: int = 3600):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
-    ap.add_argument("--shape", choices=["train_4k", "prefill_32k", "decode_32k", "long_500k"])
+    ap.add_argument(
+        "--shape", choices=["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    )
     ap.add_argument("--mesh", choices=["single", "multi"], default="single")
     ap.add_argument("--sweep", action="store_true")
     ap.add_argument("--annotate", action="store_true")
     ap.add_argument("--annotate-cell", action="store_true")
     ap.add_argument("--photonic", action="store_true")
-    ap.add_argument("--photonic-scope", default="weights",
-                    choices=["none", "weights", "weights_int8"],
-                    help="which weight GEMMs the engine routes (with --photonic)")
-    ap.add_argument("--dp-shardmap", action="store_true",
-                    help="shard_map-pinned DP train step (replicated params)")
-    ap.add_argument("--dp-compress", action="store_true",
-                    help="int8-compressed gradient all-reduce (with --dp-shardmap)")
-    ap.add_argument("--no-zero1", action="store_true",
-                    help="replicate optimizer moments across data (ablation)")
+    ap.add_argument(
+        "--photonic-scope",
+        default="weights",
+        choices=["none", "weights", "weights_int8"],
+        help="which weight GEMMs the engine routes (with --photonic)",
+    )
+    ap.add_argument(
+        "--photonic-org",
+        default="SMWA",
+        help="DPU organization: a registered name or any valid "
+        "S/A/M/W order string (with --photonic)",
+    )
+    ap.add_argument(
+        "--dp-shardmap",
+        action="store_true",
+        help="shard_map-pinned DP train step (replicated params)",
+    )
+    ap.add_argument(
+        "--dp-compress",
+        action="store_true",
+        help="int8-compressed gradient all-reduce (with --dp-shardmap)",
+    )
+    ap.add_argument(
+        "--no-zero1",
+        action="store_true",
+        help="replicate optimizer moments across data (ablation)",
+    )
     ap.add_argument("--save-hlo", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--variant", default=None)
-    ap.add_argument("--override", action="append", default=[],
-                    help="cfg overrides, e.g. --override remat=False")
+    ap.add_argument(
+        "--override",
+        action="append",
+        default=[],
+        help="cfg overrides, e.g. --override remat=False",
+    )
     args = ap.parse_args()
 
     if args.sweep:
@@ -431,6 +488,7 @@ def main():
         out = run_cell(
             args.arch, args.shape, args.mesh,
             photonic=args.photonic, photonic_scope=args.photonic_scope,
+            photonic_org=args.photonic_org,
             save_hlo=args.save_hlo,
             overrides=overrides or None, variant=variant,
             zero1=not args.no_zero1,

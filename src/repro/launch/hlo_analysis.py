@@ -185,7 +185,9 @@ def collect_collectives(hlo: str) -> List[CollectiveOp]:
 _DEF_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)[\(.]"
 )
-_PARAM_SIG_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^()]*\)|[a-z0-9]+\[[\d,]*\])(?:\{[^}]*\})?)")
+_PARAM_SIG_RE = re.compile(
+    r"%?([\w.\-]+):\s*((?:\([^()]*\)|[a-z0-9]+\[[\d,]*\])(?:\{[^}]*\})?)"
+)
 _DOT_ARGS_RE = re.compile(r"\bdot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)")
 
 
@@ -204,7 +206,10 @@ def matmul_traffic_bytes(hlo: str) -> float:
             if m:
                 shapes[m.group(1)] = m.group(2)
             if "parameter(" in line:
-                pm = re.match(r"\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+parameter", line)
+                pm = re.match(
+                    r"\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+parameter",
+                    line,
+                )
                 if pm:
                     shapes[pm.group(1)] = pm.group(2)
     total = 0.0

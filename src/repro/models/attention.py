@@ -120,7 +120,11 @@ def chunked_attention(
     (m, l, acc), _ = jax.lax.scan(
         step,
         (m0, l0, acc0),
-        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), jnp.arange(n_chunks)),
+        (
+            kc.transpose(1, 0, 2, 3, 4),
+            vc.transpose(1, 0, 2, 3, 4),
+            jnp.arange(n_chunks),
+        ),
         unroll=True if unroll else 1,
     )
     out = acc / jnp.maximum(l[..., None], 1e-30)
@@ -237,8 +241,12 @@ def gqa_decode(
         kf = ck.astype(jnp.float32) * sk[..., None]
         vf = cv.astype(jnp.float32) * sv[..., None]
     else:
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), pos, 1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), pos, 1)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k1.astype(cache["k"].dtype), pos, 1
+        )
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v1.astype(cache["v"].dtype), pos, 1
+        )
         kf = ck.astype(jnp.float32)
         vf = cv.astype(jnp.float32)
     ck = cm.with_logical(ck, ("batch", "kv_seq", "kv_heads", None))
@@ -329,7 +337,6 @@ def _mla_up_weight(p: Dict[str, Any]) -> jax.Array:
     return w
 
 
-
 def _mla_qkv(params, x, cfg: ModelConfig, positions, layer=None):
     h = cfg.n_q_heads
     nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
@@ -341,7 +348,9 @@ def _mla_qkv(params, x, cfg: ModelConfig, positions, layer=None):
 
     dkv = dense(params["wdkv"], x, cfg, site="attn.wdkv", layer=layer)  # (B,T,r+rope)
     c_kv, k_rope = dkv[..., : cfg.kv_lora_rank], dkv[..., cfg.kv_lora_rank:]
-    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,T,1,rope)
+    k_rope = apply_rope(
+        k_rope[:, :, None, :], positions, cfg.rope_theta
+    )  # (B,T,1,rope)
     return q_nope, q_rope, c_kv, k_rope
 
 
@@ -353,7 +362,9 @@ def _mla_expand_kv(params, c_kv, k_rope, cfg: ModelConfig, layer=None):
     k_nope = k_nope.reshape(b, t, h, nope)
     v = dense(params["wuv"], c_kv, cfg, site="attn.wuv", layer=layer)
     v = v.reshape(b, t, h, vd)
-    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, t, h, k_rope.shape[-1]))], -1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, t, h, k_rope.shape[-1]))], -1
+    )
     return k, v
 
 
@@ -472,5 +483,9 @@ def mla_decode(params, x, cache, pos, cfg: ModelConfig, layer=None):
 def mla_cache_def(cfg: ModelConfig, batch: int, max_seq: int, dtype):
     return {
         "c_kv": ((batch, max_seq, cfg.kv_lora_rank), ("batch", "kv_seq", None), dtype),
-        "k_rope": ((batch, max_seq, cfg.qk_rope_head_dim), ("batch", "kv_seq", None), dtype),
+        "k_rope": (
+            (batch, max_seq, cfg.qk_rope_head_dim),
+            ("batch", "kv_seq", None),
+            dtype,
+        ),
     }

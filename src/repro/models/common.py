@@ -117,7 +117,11 @@ class ModelConfig:
 
     @property
     def hd(self) -> int:
-        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+        return (
+            self.head_dim
+            if self.head_dim is not None
+            else self.d_model // self.num_heads
+        )
 
     @property
     def n_q_heads(self) -> int:
@@ -197,7 +201,9 @@ def init_tree(defs: Any, key: jax.Array, dtype: Any) -> Any:
             sub = jax.random.fold_in(sub, _stable_hash(name))
         dt = jnp.dtype(p.dtype) if p.dtype is not None else dtype
         if dt == jnp.int8:
-            arr = jax.random.randint(sub, p.shape, -127, 128, jnp.int32).astype(jnp.int8)
+            arr = jax.random.randint(sub, p.shape, -127, 128, jnp.int32).astype(
+                jnp.int8
+            )
         elif p.init == "zeros":
             arr = jnp.zeros(p.shape, dt)
         elif p.init == "ones":

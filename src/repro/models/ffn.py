@@ -63,7 +63,9 @@ def _capacity(cfg: ModelConfig, tokens: int) -> int:
     return max(c, 1)
 
 
-def moe(params, x: jax.Array, cfg: ModelConfig, layer=None) -> Tuple[jax.Array, jax.Array]:
+def moe(params, x: jax.Array, cfg: ModelConfig, layer=None) -> Tuple[
+    jax.Array, jax.Array
+]:
     """Returns (output, aux load-balancing loss).
 
     The router projection carries the site name ``"ffn.router"``: under
@@ -112,9 +114,7 @@ def moe(params, x: jax.Array, cfg: ModelConfig, layer=None) -> Tuple[jax.Array, 
         out = out + mlp(params["shared"], x, cfg, layer=layer, site="ffn.shared")
 
     # Load-balancing aux loss (Switch-style): E * sum_e f_e * p_e.
-    frac = jnp.mean(
-        jax.nn.one_hot(topi[..., 0], e, dtype=jnp.float32), axis=(0, 1)
-    )
+    frac = jnp.mean(jax.nn.one_hot(topi[..., 0], e, dtype=jnp.float32), axis=(0, 1))
     prob = jnp.mean(gates, axis=(0, 1))
     aux = e * jnp.sum(frac * prob)
     return out, aux

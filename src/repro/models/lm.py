@@ -32,7 +32,9 @@ def stack_defs(defs: Any, n: int) -> Any:
 
 
 def block_def(cfg: ModelConfig, kind: str = "self") -> Dict[str, Any]:
-    d: Dict[str, Any] = {"ln1": cm.rmsnorm_def(cfg.d_model), "ln2": cm.rmsnorm_def(cfg.d_model)}
+    d: Dict[str, Any] = {
+        "ln1": cm.rmsnorm_def(cfg.d_model), "ln2": cm.rmsnorm_def(cfg.d_model)
+    }
     if kind in ("self", "dense_ffn"):
         d["attn"] = attn.mla_def(cfg) if cfg.mla else attn.gqa_def(cfg)
     elif kind == "cross":
@@ -74,7 +76,9 @@ def lm_def(cfg: ModelConfig) -> Dict[str, Any]:
 # ---------------------------------------------------------------------------
 # Blocks (training / full-sequence forward)
 # ---------------------------------------------------------------------------
-def self_block(params, x, cfg: ModelConfig, positions, layer=None) -> Tuple[jax.Array, jax.Array]:
+def self_block(params, x, cfg: ModelConfig, positions, layer=None) -> Tuple[
+    jax.Array, jax.Array
+]:
     h = cm.rmsnorm(params["ln1"], x, cfg.norm_eps)
     if cfg.mla:
         a = attn.mla_attention(params["attn"], h, cfg, positions=positions, layer=layer)
@@ -187,9 +191,7 @@ def lm_logits(params, tokens, cfg: ModelConfig, vision: Optional[jax.Array] = No
 
 
 def lm_loss(params, batch: Dict[str, jax.Array], cfg: ModelConfig) -> jax.Array:
-    logits, aux = lm_logits(
-        params, batch["tokens"], cfg, vision=batch.get("vision")
-    )
+    logits, aux = lm_logits(params, batch["tokens"], cfg, vision=batch.get("vision"))
     ce = cm.softmax_cross_entropy(logits, batch["labels"], cfg.vocab_size)
     return ce + 0.01 * aux
 
@@ -247,7 +249,9 @@ def lm_prefill(
 
     base = 0
     if cfg.mla and cfg.num_experts:
-        x, c0 = _layer_prefill(params["first_block"], x, cfg, positions, max_seq, layer=0)
+        x, c0 = _layer_prefill(
+            params["first_block"], x, cfg, positions, max_seq, layer=0
+        )
         caches["first"] = c0
         base = 1
 
@@ -309,7 +313,9 @@ def lm_decode(params, token: jax.Array, caches, cfg: ModelConfig):
 
     base = 0
     if cfg.mla and cfg.num_experts:
-        x, c0 = _layer_decode(params["first_block"], x, caches["first"], pos, cfg, layer=0)
+        x, c0 = _layer_decode(
+            params["first_block"], x, caches["first"], pos, cfg, layer=0
+        )
         caches = {**caches, "first": c0}
         base = 1
 

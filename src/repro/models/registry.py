@@ -116,7 +116,9 @@ class Arch:
         if self.family == "audio":
             dec = t // cfg.decoder_ratio
             spec = {
-                "audio_embed": jax.ShapeDtypeStruct((b, t, cfg.d_model), cfg.compute_dtype),
+                "audio_embed": jax.ShapeDtypeStruct(
+                    (b, t, cfg.d_model), cfg.compute_dtype
+                ),
                 "tokens": jax.ShapeDtypeStruct((b, dec), jnp.int32),
                 "labels": jax.ShapeDtypeStruct((b, dec), jnp.int32),
             }
@@ -136,7 +138,11 @@ class Arch:
     def decode_specs(self, cfg: ModelConfig, shape: ShapeSpec):
         """(token spec/axes, cache spec/axes) for one decode step."""
         b = shape.global_batch
-        max_seq = shape.seq_len if self.family != "audio" else shape.seq_len // cfg.decoder_ratio
+        max_seq = (
+            shape.seq_len
+            if self.family != "audio"
+            else shape.seq_len // cfg.decoder_ratio
+        )
         meta = {"enc_seq": shape.seq_len}
         cache = self.cache_def(cfg, b, max_seq, meta, cfg.compute_dtype)
         tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
@@ -166,7 +172,9 @@ def _lm_loss(params, batch, cfg):
 
 
 def _lm_prefill(params, batch, cfg, max_seq):
-    return lm.lm_prefill(params, batch["tokens"], cfg, max_seq, vision=batch.get("vision"))
+    return lm.lm_prefill(
+        params, batch["tokens"], cfg, max_seq, vision=batch.get("vision")
+    )
 
 
 def _lm_decode(params, token, cache, cfg):
@@ -232,9 +240,27 @@ FAMILY_FNS = {
     "dense": (lm.lm_def, _lm_loss, _lm_prefill, _lm_decode, _lm_cache_def),
     "vlm": (lm.lm_def, _lm_loss, _lm_prefill, _lm_decode, _lm_cache_def),
     "moe": (lm.lm_def, _lm_loss, _lm_prefill, _lm_decode, _lm_cache_def),
-    "ssm": (xlstm.xlstm_def, xlstm.xlstm_loss, _xlstm_prefill, xlstm.xlstm_decode, _xlstm_cache_def),
-    "hybrid": (zamba2.zamba2_def, zamba2.zamba2_loss, _zamba_prefill, zamba2.zamba2_decode, _zamba_cache_def),
-    "audio": (whisper.whisper_def, whisper.whisper_loss, _whisper_prefill, whisper.whisper_decode, _whisper_cache_def),
+    "ssm": (
+        xlstm.xlstm_def,
+        xlstm.xlstm_loss,
+        _xlstm_prefill,
+        xlstm.xlstm_decode,
+        _xlstm_cache_def,
+    ),
+    "hybrid": (
+        zamba2.zamba2_def,
+        zamba2.zamba2_loss,
+        _zamba_prefill,
+        zamba2.zamba2_decode,
+        _zamba_cache_def,
+    ),
+    "audio": (
+        whisper.whisper_def,
+        whisper.whisper_loss,
+        _whisper_prefill,
+        whisper.whisper_decode,
+        _whisper_cache_def,
+    ),
 }
 
 

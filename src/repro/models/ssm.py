@@ -130,9 +130,7 @@ def _ssd_chunked(
     return ys, state
 
 
-def mamba_block(
-    params, x: jax.Array, cfg: ModelConfig
-) -> jax.Array:
+def mamba_block(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     """Full-sequence (train/prefill) Mamba2 block with residual."""
     inner, st, h, dh = _inner(cfg), cfg.ssm_state_size, _nheads(cfg), cfg.ssm_head_dim
     res = x
@@ -146,7 +144,9 @@ def mamba_block(
     y, _ = _ssd_chunked(
         xi, b_mat, c_mat, dt, params["a_log"], cfg.ssm_chunk, unroll=cfg.unroll_scans
     )
-    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xi.astype(jnp.float32)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xi.astype(
+        jnp.float32
+    )
     y = y.reshape(*x.shape[:2], inner).astype(x.dtype)
     y = cm.rmsnorm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
     out = dense(params["out_proj"], y, cfg, site="out_proj")
@@ -158,7 +158,11 @@ def mamba_state_def(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
     conv_ch = inner + 2 * st
     return {
         "ssm": ((batch, h, dh, st), ("batch", "mamba_heads", None, None), jnp.float32),
-        "conv": ((batch, cfg.ssm_conv_width - 1, conv_ch), ("batch", None, "inner"), dtype),
+        "conv": (
+            (batch, cfg.ssm_conv_width - 1, conv_ch),
+            ("batch", None, "inner"),
+            dtype,
+        ),
     }
 
 
@@ -179,7 +183,9 @@ def mamba_prefill(
     y, s = _ssd_chunked(
         xi, b_mat, c_mat, dt, params["a_log"], cfg.ssm_chunk, unroll=cfg.unroll_scans
     )
-    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xi.astype(jnp.float32)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xi.astype(
+        jnp.float32
+    )
     y = y.reshape(*x.shape[:2], inner).astype(x.dtype)
     y = cm.rmsnorm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
     out = dense(params["out_proj"], y, cfg, site="out_proj")
@@ -207,9 +213,7 @@ def mamba_decode(
         dt[:, 0, :].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
     )  # (B,H)
     a = jnp.exp(dt1 * -jnp.exp(params["a_log"].astype(jnp.float32)))  # (B,H)
-    s = state["ssm"] * a[:, :, None, None] + jnp.einsum(
-        "bh,bhd,bs->bhds", dt1, xi, b_v
-    )
+    s = state["ssm"] * a[:, :, None, None] + jnp.einsum("bh,bhd,bs->bhds", dt1, xi, b_v)
     y = jnp.einsum("bhds,bs->bhd", s, c_v)
     y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xi
     y = y.reshape(-1, 1, inner).astype(x.dtype)

@@ -98,7 +98,9 @@ def whisper_logits(params, batch, cfg: ModelConfig):
 
     x, _ = jax.lax.scan(step, x, params["dec_layers"])
     x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    return cm.dense(params["lm_head"], x, cfg, site="lm_head"), jnp.zeros((), jnp.float32)
+    return cm.dense(params["lm_head"], x, cfg, site="lm_head"), jnp.zeros(
+        (), jnp.float32
+    )
 
 
 def whisper_loss(params, batch, cfg: ModelConfig):
@@ -116,7 +118,9 @@ def whisper_prefill(params, batch, cfg: ModelConfig, max_seq: int):
 
     def step(x, p):
         h = cm.rmsnorm(p["ln1"], x, cfg.norm_eps)
-        a, kv_self = attn.gqa_prefill(p["attn"], h, cfg, positions=positions, max_seq=max_seq)
+        a, kv_self = attn.gqa_prefill(
+            p["attn"], h, cfg, positions=positions, max_seq=max_seq
+        )
         x = x + a
         h = cm.rmsnorm(p["ln_cross"], x, cfg.norm_eps)
         kv_cross = attn.cross_kv(p["cross"], enc, cfg)
@@ -151,7 +155,9 @@ def whisper_decode(params, token, cache, cfg: ModelConfig):
         x = x + ffn.mlp(p["ffn"], h, cfg)
         return x, kv_self
 
-    x, new_self = jax.lax.scan(step, x, (params["dec_layers"], cache["self"], cache["cross"]))
+    x, new_self = jax.lax.scan(
+        step, x, (params["dec_layers"], cache["self"], cache["cross"])
+    )
     x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = cm.dense(params["lm_head"], x, cfg, site="lm_head")
     return logits, {**cache, "self": new_self, "pos": pos + 1}

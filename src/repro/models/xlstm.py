@@ -129,7 +129,9 @@ def _mlstm_qkv_gates(params, xin, cfg: ModelConfig):
     k = dense(params["wk"], xin, cfg, site="wk").reshape(b, t, h, dh)
     v = dense(params["wv"], xin, cfg, site="wv").reshape(b, t, h, dh)
     li = dense(params["wi"], xin, cfg, site="wi").astype(jnp.float32)         # (B,T,H)
-    lf = jax.nn.log_sigmoid(dense(params["wf"], xin, cfg, site="wf").astype(jnp.float32))
+    lf = jax.nn.log_sigmoid(
+        dense(params["wf"], xin, cfg, site="wf").astype(jnp.float32)
+    )
     return q, k, v, li, lf
 
 
@@ -182,7 +184,9 @@ def mlstm_decode(params, x, state, cfg: ModelConfig):
     den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n_t)), jnp.exp(-m_t))
     hout = (num / den[..., None]).reshape(x.shape[0], 1, -1).astype(x.dtype)
     y = cm.rmsnorm(params["out_norm"], hout, cfg.norm_eps) * jax.nn.silu(gate)
-    return res + dense(params["down"], y, cfg, site="down"), {"C": c_t, "n": n_t, "m": m_t}
+    return res + dense(params["down"], y, cfg, site="down"), {
+        "C": c_t, "n": n_t, "m": m_t
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -249,7 +253,9 @@ def slstm_prefill(params, x, cfg: ModelConfig):
     )
     hs = hs.astype(x.dtype)
     y = cm.rmsnorm(params["out_norm"], hs, cfg.norm_eps)
-    return res + dense(params["down"], y, cfg, site="down"), {"c": c, "n": n, "m": m, "h": h}
+    return res + dense(params["down"], y, cfg, site="down"), {
+        "c": c, "n": n, "m": m, "h": h
+    }
 
 
 def slstm_decode(params, x, state, cfg: ModelConfig):
@@ -260,7 +266,9 @@ def slstm_decode(params, x, state, cfg: ModelConfig):
     hs, (c, n, m, h) = _slstm_scan(params, gx, cfg, st)
     hs = hs.astype(x.dtype)
     y = cm.rmsnorm(params["out_norm"], hs, cfg.norm_eps)
-    return res + dense(params["down"], y, cfg, site="down"), {"c": c, "n": n, "m": m, "h": h}
+    return res + dense(params["down"], y, cfg, site="down"), {
+        "c": c, "n": n, "m": m, "h": h
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -331,7 +339,9 @@ def xlstm_logits(params, tokens, cfg: ModelConfig):
     x = cm.with_logical(x, ("batch", None, None))
     x, _ = _xlstm_body(params, x, cfg, "full")
     x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    return cm.dense(params["lm_head"], x, cfg, site="lm_head"), jnp.zeros((), jnp.float32)
+    return cm.dense(params["lm_head"], x, cfg, site="lm_head"), jnp.zeros(
+        (), jnp.float32
+    )
 
 
 def xlstm_loss(params, batch, cfg: ModelConfig):
@@ -364,8 +374,16 @@ def xlstm_cache_def(cfg: ModelConfig, batch: int, max_seq: int, dtype):
     h, dh, d = cfg.num_heads, _dh(cfg), cfg.d_model
     return {
         "mlstm": {
-            "C": ((n_groups, per, batch, h, dh, dh), (None, None, "batch", None, "inner", None), jnp.float32),
-            "n": ((n_groups, per, batch, h, dh), (None, None, "batch", None, "inner"), jnp.float32),
+            "C": (
+                (n_groups, per, batch, h, dh, dh),
+                (None, None, "batch", None, "inner", None),
+                jnp.float32,
+            ),
+            "n": (
+                (n_groups, per, batch, h, dh),
+                (None, None, "batch", None, "inner"),
+                jnp.float32,
+            ),
             "m": ((n_groups, per, batch, h), (None, None, "batch", None), jnp.float32),
         },
         "slstm": {

@@ -70,7 +70,9 @@ def zamba2_logits(params, tokens, cfg: ModelConfig):
 
     x, _ = jax.lax.scan(group, x, params["mamba"])
     x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    return cm.dense(params["lm_head"], x, cfg, site="lm_head"), jnp.zeros((), jnp.float32)
+    return cm.dense(params["lm_head"], x, cfg, site="lm_head"), jnp.zeros(
+        (), jnp.float32
+    )
 
 
 def zamba2_loss(params, batch, cfg: ModelConfig):
@@ -90,7 +92,9 @@ def zamba2_prefill(params, tokens, cfg: ModelConfig, max_seq: int):
 
         x, msts = jax.lax.scan(inner, x, mparams)
         h = cm.rmsnorm(shared["ln1"], x, cfg.norm_eps)
-        a, kv = attn.gqa_prefill(shared["attn"], h, cfg, positions=positions, max_seq=max_seq)
+        a, kv = attn.gqa_prefill(
+            shared["attn"], h, cfg, positions=positions, max_seq=max_seq
+        )
         x = x + a
         h = cm.rmsnorm(shared["ln2"], x, cfg.norm_eps)
         x = x + ffn.mlp(shared["ffn"], h, cfg)

@@ -1,10 +1,11 @@
 """Organization-aware analog channel model (paper Tables II–IV, DESIGN.md §8).
 
-:func:`build_channel_model` maps an organization (ASMW / MASW / SMWA), the
-photonic link parameters of Table IV, and a DPE geometry (fan-in ``N``,
-fan-out ``M``, analog precision ``B``, ``N_lambda`` WDM channels) to a
-:class:`ChannelModel` — a frozen, hashable description of every signal
-manipulation the DPU applies to a psum:
+:func:`build_channel_model` maps an organization (a name like ASMW / MASW /
+SMWA, any valid S/A/M/W order string, or a typed
+:class:`repro.orgs.OrgSpec`), the photonic link parameters of Table IV, and
+a DPE geometry (fan-in ``N``, fan-out ``M``, analog precision ``B``,
+``N_lambda`` WDM channels) to a :class:`ChannelModel` — a frozen, hashable
+description of every signal manipulation the DPU applies to a psum:
 
 * **loss chain** (Table III): through loss over the out-of-resonance rings a
   channel traverses (``2(N-1)`` for ASMW, ``N`` for MASW, ``2`` for SMWA),
@@ -36,14 +37,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import scalability
-from repro.core.organizations import (
-    CROSSTALK,
-    EFFECT_BUDGET_DB,
-    LOSSES,
-    through_device_count,
-)
 from repro.core.params import PhotonicParams, dbm_to_watts
 from repro.noise import stages
+from repro.orgs import EFFECT_BUDGET_DB, OrgSpec, resolve
 
 
 # ---------------------------------------------------------------------------
@@ -150,7 +146,7 @@ def _budget_to_coupling(budget_db: float) -> float:
 
 
 def build_channel_model(
-    organization: str,
+    organization: "str | OrgSpec",
     params: Optional[PhotonicParams] = None,
     *,
     n: Optional[int] = None,
@@ -165,16 +161,22 @@ def build_channel_model(
 ) -> ChannelModel:
     """Derive the quantitative channel model for one organization.
 
-    ``n`` defaults to the calibrated achievable DPE size at (B, DR);
-    ``m`` defaults to ``n`` (paper assumption).  ``enable_loss=False`` zeroes
-    the loss chain *for the SNR computation* (the detector then sees the
-    full laser power), which isolates the crosstalk stages in ablations.
+    ``organization`` accepts a name, a four-letter block-order string, or
+    a typed :class:`repro.orgs.OrgSpec` (one resolution point — unknown or
+    wrong-case orders raise ``ValueError`` naming the valid choices); the
+    Table II/III structure is derived from the block order, so unstudied
+    orderings get a physically consistent channel.  ``n`` defaults to the
+    calibrated achievable DPE size at (B, DR); ``m`` defaults to ``n``
+    (paper assumption).  ``enable_loss=False`` zeroes the loss chain *for
+    the SNR computation* (the detector then sees the full laser power),
+    which isolates the crosstalk stages in ablations.
     """
-    org = organization.upper()
+    spec = resolve(organization)
+    org = spec.name
     m_given = m  # provenance: record m as-given (None = paper's m=n rule)
     params = params or scalability.CALIBRATED
     if n is None:
-        n = scalability.calibrated_max_n(org, bits, datarate_gs)
+        n = scalability.calibrated_max_n(spec, bits, datarate_gs)
         if n <= 0:
             raise ValueError(
                 f"infeasible operating point {org} B={bits} DR={datarate_gs}"
@@ -182,20 +184,22 @@ def build_channel_model(
     if m is None:
         m = n
 
-    loss = LOSSES[org]
-    through_db = through_device_count(org, n) * params.p_mrm_obl_db
+    through_db = spec.through_device_count(n) * params.p_mrm_obl_db
     prop_db = (
-        params.p_si_att_db_per_mm * loss.waveguide_length_factor * n * params.d_mrr_mm
+        params.p_si_att_db_per_mm
+        * spec.waveguide_length_factor
+        * n
+        * params.d_mrr_mm
         + params.p_smf_att_db
     )
     split_db = params.p_splitter_il_db * math.log2(max(m, 2))
     il_db = params.p_ec_il_db + params.p_mrm_il_db + params.p_mrr_w_il_db
     fanout_db = 10.0 * math.log10(max(m, 1))
-    penalty_db = params.penalty_db(org)
+    penalty_db = params.penalty_db(spec)
 
     # Delivered power (Eq. 3, org-aware through loss) and the SNR it buys.
     if enable_loss:
-        delivered_dbm = scalability.output_power_dbm(n, m, org, params)
+        delivered_dbm = scalability.output_power_dbm(n, m, spec, params)
     else:
         delivered_dbm = params.p_laser_dbm
     p_ch = dbm_to_watts(delivered_dbm)
@@ -231,14 +235,14 @@ def build_channel_model(
         fullscale = float((2**bits - 1) ** 2)
         sigma = fullscale * noise_amp / max(r_s * p_ch, 1e-30)
 
-    xt = CROSSTALK[org]
     eps_im = eps_cw = alpha = 0.0
     if enable_crosstalk:
-        if xt.inter_modulation:
+        # Table II presence/absence, derived from the block order.
+        if spec.inter_modulation:
             eps_im = _budget_to_coupling(EFFECT_BUDGET_DB["inter_modulation"])
-        if xt.cross_weight:
+        if spec.cross_weight:
             eps_cw = _budget_to_coupling(EFFECT_BUDGET_DB["cross_weight"])
-        if xt.filter_truncation:
+        if spec.filter_truncation:
             alpha = 1.0 - 10.0 ** (-EFFECT_BUDGET_DB["filter_truncation"] / 20.0)
 
     builder = (
@@ -367,9 +371,7 @@ def analog_pass_psums(
     """
     xs = x_chunks.astype(jnp.int32)
     ws = w_chunks.astype(jnp.int32)
-    psum = jnp.einsum(
-        "rgn,gnc->rgc", xs, ws, preferred_element_type=jnp.int32
-    )
+    psum = jnp.einsum("rgn,gnc->rgc", xs, ws, preferred_element_type=jnp.int32)
     a = psum.astype(jnp.float32)
     if channel.intermod_eps > 0.0:
         # Modulated symbols leak into spectrally-adjacent channels *before*

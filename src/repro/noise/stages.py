@@ -197,9 +197,7 @@ def seed_from_key(prng_key: Optional[jax.Array]) -> Optional[jax.Array]:
     return seed
 
 
-def detector_noise(
-    a: jax.Array, sigma: float, base: jax.Array
-) -> jax.Array:
+def detector_noise(a: jax.Array, sigma: float, base: jax.Array) -> jax.Array:
     """Additive shot/thermal/RIN noise at the balanced photodetector.
 
     ``sigma`` is the per-psum standard deviation in psum LSBs (set by the

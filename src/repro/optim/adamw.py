@@ -88,7 +88,9 @@ def update(
         nu = b2 * nu + (1 - b2) * g32 * g32
         mhat = mu / bc1
         vhat = nu / bc2
-        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
         return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
 
     flat_p, treedef = jax.tree.flatten(params)

@@ -118,8 +118,12 @@ def quantize_dequantize(tree: Any) -> Tuple[Any, Any]:
         return deq, (g - deq)
 
     pairs = compat.tree_map(leaf, tree)
-    comp = compat.tree_map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
-    resid = compat.tree_map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    comp = compat.tree_map(
+        lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    resid = compat.tree_map(
+        lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple)
+    )
     return comp, resid
 
 

@@ -8,8 +8,10 @@ prepackable is the byte-size integer GEMM decomposition of
 arXiv:2407.06134).  :class:`PhotonicEngine` is the software image of that
 operating point:
 
-* a :class:`~repro.core.dpu.DPUConfig` (organization, precision, rate,
-  analog channel),
+* a :class:`~repro.core.dpu.DPUConfig` (organization — any
+  ``str | OrgSpec`` the :func:`repro.orgs.resolve` point accepts,
+  including orderings the paper never studied — precision, rate, analog
+  channel),
 * a backend (``ref`` oracle / ``pallas`` TPU kernel / ``exact`` upper
   bound),
 * a :class:`SitePolicy` deciding which *named GEMM sites* ("attn.wq",
@@ -118,9 +120,7 @@ class SitePolicy:
     def routes(self, site: Optional[str]) -> bool:
         if site is None:
             return True
-        return self._match(self.include, site) and not self._match(
-            self.exclude, site
-        )
+        return self._match(self.include, site) and not self._match(self.exclude, site)
 
     @staticmethod
     def _match(patterns: Tuple[str, ...], site: str) -> bool:
@@ -154,9 +154,11 @@ class PhotonicEngine:
     def describe(self) -> str:
         d = self.dpu
         ch = d.effective_channel()
+        spec = d.org_spec
         return (
-            f"{self.backend} backend, {d.organization} B={d.bits} "
-            f"N={d.n} @ {d.datarate_gs} GS/s, "
+            f"{self.backend} backend, {d.organization} "
+            f"(blocks {'->'.join(spec.blocks)}, through {spec.through_devices}) "
+            f"B={d.bits} N={d.n} @ {d.datarate_gs} GS/s, "
             f"channel={'analog' if ch is not None and ch.analog else 'ideal'}, "
             f"sites include={list(self.policy.include)} "
             f"exclude={list(self.policy.exclude)}"
@@ -375,9 +377,7 @@ def engine_for(
 ) -> PhotonicEngine:
     """Cached engine construction (one frozen engine per operating point,
     so ``jit`` retraces don't multiply)."""
-    return PhotonicEngine(
-        dpu=dpu, backend=backend, policy=SitePolicy(include, exclude)
-    )
+    return PhotonicEngine(dpu=dpu, backend=backend, policy=SitePolicy(include, exclude))
 
 
 # ---------------------------------------------------------------------------

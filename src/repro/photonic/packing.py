@@ -54,9 +54,15 @@ class PackedDense:
 
     __slots__ = ("wq", "w_scale", "k", "c", "tiling", "shards")
 
-    def __init__(self, wq, w_scale, k: int, c: int,
-                 tiling: Optional[Tuple[int, int, int]] = None,
-                 shards: int = 1):
+    def __init__(
+        self,
+        wq,
+        w_scale,
+        k: int,
+        c: int,
+        tiling: Optional[Tuple[int, int, int]] = None,
+        shards: int = 1,
+    ):
         self.wq = wq
         self.w_scale = w_scale
         self.k = k
@@ -65,8 +71,7 @@ class PackedDense:
         self.shards = shards
 
     def tree_flatten(self):
-        return (self.wq, self.w_scale), (self.k, self.c, self.tiling,
-                                         self.shards)
+        return (self.wq, self.w_scale), (self.k, self.c, self.tiling, self.shards)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -89,9 +94,7 @@ class PackedDense:
             wq = wq.reshape(*lead, self.k, self.c)
         else:
             wq = wq[..., : self.k, : self.c]
-        return wq.astype(jnp.float32) * self.w_scale.astype(jnp.float32)[
-            ..., None, :
-        ]
+        return wq.astype(jnp.float32) * self.w_scale.astype(jnp.float32)[..., None, :]
 
     def __repr__(self):
         return (
@@ -125,11 +128,7 @@ def _is_dense_def(node: Any) -> bool:
     if not isinstance(node, dict) or "w" not in node:
         return False
     w = node["w"]
-    return (
-        not isinstance(w, dict)
-        and hasattr(w, "shape")
-        and len(w.shape) >= 2
-    )
+    return (not isinstance(w, dict) and hasattr(w, "shape") and len(w.shape) >= 2)
 
 
 def pack_dense(
@@ -222,9 +221,7 @@ def prepack_params(
         rules = {"fanin": axis, "out": None}
         pd = packed["w"]
         lead = (None,) * (pd.wq.ndim - 2)
-        wq_sh = shd.named_sharding(
-            mesh, pd.wq.shape, lead + ("fanin", "out"), rules
-        )
+        wq_sh = shd.named_sharding(mesh, pd.wq.shape, lead + ("fanin", "out"), rules)
         sc_sh = shd.named_sharding(
             mesh, pd.w_scale.shape, (None,) * pd.w_scale.ndim, rules
         )

@@ -11,7 +11,10 @@ the *per-DPE* fan-in, so a K-sharded GEMM must evaluate its
 rather than the global ``N`` (the circuit-level N-partitioning argument
 of arXiv:2407.06134, lifted to the system-sharding level).  Sharding
 *helps* the analog channel: fewer rings per waveguide, shorter
-propagation, more delivered power per psum.
+propagation, more delivered power per psum.  The rebuild goes through
+:func:`repro.noise.shard_local_channel`, whose builder provenance records
+the canonical organization name — so sharding works identically for the
+paper-studied orders and any :class:`repro.orgs.OrgSpec` ordering.
 
 Execution modes (both dispatch from ``models.common.dense`` via
 :func:`maybe_tp_matmul`):
@@ -201,8 +204,7 @@ def _row_sharding(mesh, axis, rows):
     return dp_axes
 
 
-def _run_shard_map(mesh, axis, body, args, specs, fold, prng_key,
-                   out_spec=P()):
+def _run_shard_map(mesh, axis, body, args, specs, fold, prng_key, out_spec=P()):
     """Invoke ``body(*main, fold=..., prng_key=...)`` under shard_map.
 
     ``fold``/``prng_key`` may be ``None`` (absent), a traced scalar, or a
@@ -281,9 +283,7 @@ def _float_fwd_impl(meta, x, w, fold, prng_key):
             # exact under any reduction order).
             ax = jax.lax.pmax(jnp.max(jnp.abs(xl)), x_axes)
             xq, sx = quantize_symmetric(xl, bits, amax=ax)
-            aw = jax.lax.pmax(
-                jnp.max(jnp.abs(wl), axis=0, keepdims=True), axis
-            )
+            aw = jax.lax.pmax(jnp.max(jnp.abs(wl), axis=0, keepdims=True), axis)
             wq, sw = quantize_symmetric(wl, bits, axis=0, amax=aw)
             out = psum_int_gemm(
                 eng, xq, wq, axis=axis, site=site, fold=fold,
@@ -370,9 +370,7 @@ def _packed_fwd_impl(meta, x, wq, w_scale, fold, prng_key):
                 logical_kc=(k_local, c),
                 tiling=tiling,
             )
-            return out.astype(jnp.float32) * sx * scale.astype(jnp.float32)[
-                None, :
-            ]
+            return out.astype(jnp.float32) * sx * scale.astype(jnp.float32)[None, :]
 
         # Activations shard rows over the DP axes and K over the TP axis,
         # int8 banks shard on their fan-in rows (the sharded pack stores

@@ -102,9 +102,7 @@ class Engine:
             )
         self.params = params
         self.cfg = cfg
-        self._decode = jax.jit(
-            lambda p, t, c: arch.decode(p, t, c, model_cfg)
-        )
+        self._decode = jax.jit(lambda p, t, c: arch.decode(p, t, c, model_cfg))
         self.slots: List[Optional[Request]] = [None] * cfg.batch_size
         self.cache = None
         self.tokens = jnp.zeros((cfg.batch_size, 1), jnp.int32)
@@ -174,9 +172,7 @@ class Engine:
         if all(s is None for s in self.slots):
             return
         with self._tp_scope():
-            logits, self.cache = self._decode(
-                self.params, self.tokens, self.cache
-            )
+            logits, self.cache = self._decode(self.params, self.tokens, self.cache)
         self.stats["decode_steps"] += 1
         logits = logits[:, -1, : self.model_cfg.vocab_size]
         if self.cfg.greedy:

@@ -47,9 +47,7 @@ def zero1_axes(param_axes: Any, param_shapes: Any, divisor: int) -> Any:
     by the data-parallel degree (skips e.g. 95-layer stack dims)."""
 
     def is_axes_leaf(x):
-        return isinstance(x, tuple) and all(
-            isinstance(e, (str, type(None))) for e in x
-        )
+        return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
 
     flat_shapes, treedef = compat.tree_flatten(param_shapes)
     flat_axes = treedef.flatten_up_to(param_axes)
@@ -99,9 +97,7 @@ def use_rules(mesh: Mesh, rules: Optional[Dict[str, AxisName]] = None):
     _CTX.mesh = mesh
     merged = dict(DEFAULT_RULES, **(rules or {}))
     # JSON-sourced overrides arrive as lists; normalize to tuples.
-    _CTX.rules = {
-        k: tuple(v) if isinstance(v, list) else v for k, v in merged.items()
-    }
+    _CTX.rules = {k: tuple(v) if isinstance(v, list) else v for k, v in merged.items()}
     _CTX.fallbacks = []
     try:
         yield

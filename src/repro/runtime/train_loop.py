@@ -196,7 +196,10 @@ def train(
             dt = time.time() - t0
             losses.append(loss)
             if watchdog.observe(step, dt):
-                log(f"[train] straggler at step {step}: {dt:.3f}s (ewma {watchdog.ewma:.3f}s)")
+                log(
+                    f"[train] straggler at step {step}: {dt:.3f}s "
+                    f"(ewma {watchdog.ewma:.3f}s)"
+                )
             if step % train_cfg.log_every == 0:
                 log(f"[train] step {step} loss {loss:.4f} ({dt:.3f}s)")
             is_last = step == train_cfg.steps - 1

@@ -93,9 +93,7 @@ class TestAxisType:
     def test_make_mesh_explicit_axis_types(self):
         # Passing axis_types must not crash on any version (it is dropped
         # where unsupported).
-        mesh = compat.make_mesh(
-            (1,), ("data",), axis_types=(compat.AxisType.Auto,)
-        )
+        mesh = compat.make_mesh((1,), ("data",), axis_types=(compat.AxisType.Auto,))
         assert mesh.shape["data"] == 1
 
 

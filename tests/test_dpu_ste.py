@@ -130,9 +130,7 @@ def test_noise_without_seed_is_explicit_error():
         dpu_int_gemm(xq, wq, DPUConfig(dpe_size=16, noise_sigma_lsb=2.0))
     ch = build_channel_model("ASMW", n=16)
     with pytest.raises(ValueError, match="randomness source"):
-        dpu_int_gemm(
-            xq, wq, DPUConfig(organization="ASMW", dpe_size=16, channel=ch)
-        )
+        dpu_int_gemm(xq, wq, DPUConfig(organization="ASMW", dpe_size=16, channel=ch))
     # Crosstalk-only channels are deterministic — no seed needed.
     out = dpu_int_gemm(
         xq,

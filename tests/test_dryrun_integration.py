@@ -33,9 +33,16 @@ def test_dryrun_cell_end_to_end(tmp_path, mesh):
     )
     # Surface both streams: the cell writes its traceback to stdout (JSON)
     # and import-time crashes (e.g. mesh construction) to stderr.
-    assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}\nstdout:\n{r.stdout[-2000:]}"
+    assert (
+        r.returncode == 0
+    ), f"stderr:\n{r.stderr[-3000:]}\nstdout:\n{r.stdout[-2000:]}"
     out = json.loads(
-        (REPO / "results" / "dryrun" / f"qwen2-0_5b__decode_32k__{mesh}__pytest.json").read_text()
+        (
+            REPO
+            / "results"
+            / "dryrun"
+            / f"qwen2-0_5b__decode_32k__{mesh}__pytest.json"
+        ).read_text()
     )
     assert out["ok"]
     # compiled on 256 chips with analyses populated

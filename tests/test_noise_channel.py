@@ -82,7 +82,9 @@ def test_detector_sigma_ordering_and_monotonicity():
         sig = {o: build_channel_model(o, n=n).detector_sigma_lsb for o in ORGANIZATIONS}
         assert sig["ASMW"] > sig["MASW"] > sig["SMWA"], (n, sig)
     for org in ORGANIZATIONS:
-        sigs = [build_channel_model(org, n=n).detector_sigma_lsb for n in (8, 16, 32, 64)]
+        sigs = [
+            build_channel_model(org, n=n).detector_sigma_lsb for n in (8, 16, 32, 64)
+        ]
         assert sigs == sorted(sigs)
 
 
@@ -177,7 +179,10 @@ def test_pallas_noise_statistics_match_oracle():
     ch = build_channel_model("SMWA", n=64).disable("crosstalk")
     cfg = DPUConfig(dpe_size=64, channel=ch, noise_seed=3)
     gold = np.asarray(exact_int_gemm(xq, wq), np.float64)
-    e_pal = np.asarray(photonic_gemm_int(xq, wq, cfg, backend="pallas"), np.float64) - gold
+    e_pal = (
+        np.asarray(photonic_gemm_int(xq, wq, cfg, backend="pallas"), np.float64)
+        - gold
+    )
     e_ref = np.asarray(photonic_gemm_int(xq, wq, cfg, backend="ref"), np.float64) - gold
     assert abs(e_pal.std() / e_ref.std() - 1.0) < 0.1, (e_pal.std(), e_ref.std())
     # Means consistent with zero (std over sqrt(n_samples) scale).
@@ -193,7 +198,10 @@ def test_pallas_noise_statistics_ragged_k():
     ch = build_channel_model("SMWA", n=83).disable("crosstalk")
     cfg = DPUConfig(dpe_size=83, channel=ch, noise_seed=9)
     gold = np.asarray(exact_int_gemm(xq, wq), np.float64)
-    e_pal = np.asarray(photonic_gemm_int(xq, wq, cfg, backend="pallas"), np.float64) - gold
+    e_pal = (
+        np.asarray(photonic_gemm_int(xq, wq, cfg, backend="pallas"), np.float64)
+        - gold
+    )
     e_ref = np.asarray(photonic_gemm_int(xq, wq, cfg, backend="ref"), np.float64) - gold
     assert abs(e_pal.std() / e_ref.std() - 1.0) < 0.1, (e_pal.std(), e_ref.std())
 
@@ -284,9 +292,7 @@ def test_adc_saturation_under_channel():
     rng = np.random.default_rng(8)
     xq = _rand_int8(rng, (8, 128))
     wq = _rand_int8(rng, (128, 8))
-    ch = build_channel_model("SMWA", n=32, adc_bits=8).disable(
-        "detector", "filter"
-    )
+    ch = build_channel_model("SMWA", n=32, adc_bits=8).disable("detector", "filter")
     cfg = DPUConfig(dpe_size=32, channel=ch)
     gold = np.asarray(exact_int_gemm(xq, wq))
     sat = np.asarray(photonic_gemm_int(xq, wq, cfg, backend="ref"))

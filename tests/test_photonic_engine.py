@@ -183,9 +183,7 @@ def test_moe_router_excluded_end_to_end():
     logits_engine = dense(
         params["router"], x.astype(jnp.float32), cfg, site="ffn.router"
     )
-    np.testing.assert_array_equal(
-        np.asarray(logits_engine), np.asarray(logits_digital)
-    )
+    np.testing.assert_array_equal(np.asarray(logits_engine), np.asarray(logits_digital))
     # the full MoE layer still runs (photonic experts, digital router)
     out, aux = ffn.moe(params, x, cfg)
     assert bool(jnp.all(jnp.isfinite(out))) and bool(jnp.isfinite(aux))
@@ -298,9 +296,7 @@ def test_model_scan_layers_get_layer_folded_noise():
             photonic=_noisy_dpu(noise_seed=11),
             photonic_backend="ref",
         )
-        params = init_tree(
-            arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype
-        )
+        params = init_tree(arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
         # zero all layer weights: every layer computes pure noise on top of
         # an unchanged residual stream -> identical operands at every layer
         params["layers"] = jax.tree.map(jnp.zeros_like, params["layers"])
@@ -343,9 +339,7 @@ def test_serve_engine_prepacks_and_decode_has_zero_weight_quant_ops():
         photonic_backend="ref",
     )
     params = init_tree(arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
-    eng = serve.Engine(
-        arch, cfg, params, serve.ServeConfig(batch_size=2, max_seq=32)
-    )
+    eng = serve.Engine(arch, cfg, params, serve.ServeConfig(batch_size=2, max_seq=32))
     assert eng.photonic is not None
 
     def has_packed(node):
@@ -396,7 +390,9 @@ def test_serve_prepacked_outputs_match_per_call():
     prompts = [np.arange(5, dtype=np.int32) + i for i in range(3)]
 
     def run_serve(force_per_call):
-        eng = serve.Engine(arch, cfg, params, serve.ServeConfig(batch_size=2, max_seq=32))
+        eng = serve.Engine(
+            arch, cfg, params, serve.ServeConfig(batch_size=2, max_seq=32)
+        )
         if force_per_call:
             eng.params = params  # bypass the prepack done at construction
         reqs = [
@@ -443,9 +439,7 @@ def test_all_archs_smoke_with_engine_routed_photonic():
             photonic=DPUConfig(organization="SMWA", bits=4, datarate_gs=5.0),
             photonic_backend="ref",
         )
-        params = init_tree(
-            arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype
-        )
+        params = init_tree(arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
         B, T = 2, 8
         toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
         batch = {"tokens": toks}
@@ -509,9 +503,7 @@ def test_prepack_site_names_agree_with_call_time_sites(name):
     PhotonicEngine.matmul = rec_packed
     try:
         rng = np.random.default_rng(0)
-        params = init_tree(
-            arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype
-        )
+        params = init_tree(arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
         B, T = 1, 8
         toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
         batch = {"tokens": toks, "labels": toks}

@@ -129,9 +129,7 @@ def test_bit_slice_recompose(bits, seed):
     q = _rand_int8(rng, (5, 7))
     num = -(-8 // bits)
     sl = bit_slices(q, bits, num)
-    recomposed = sum(
-        sl[s].astype(jnp.int32) << (bits * s) for s in range(num)
-    )
+    recomposed = sum(sl[s].astype(jnp.int32) << (bits * s) for s in range(num))
     np.testing.assert_array_equal(np.asarray(recomposed), np.asarray(q, dtype=np.int32))
     # and the ref decomposition agrees
     sl2 = slice_decompose(q, bits, num)

@@ -85,9 +85,7 @@ def test_mla_absorbed_decode_exact():
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
 
     a = _roundtrip(arch, cfg, params, toks, 16)
-    b = _roundtrip(
-        arch, dataclasses.replace(cfg, mla_absorb=True), params, toks, 16
-    )
+    b = _roundtrip(arch, dataclasses.replace(cfg, mla_absorb=True), params, toks, 16)
     assert float(jnp.abs(a - b).max()) < 1e-4
 
 

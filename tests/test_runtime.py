@@ -54,7 +54,9 @@ class TestDataPipeline:
 
 class TestCheckpoint:
     def test_save_restore_roundtrip(self, tmp_path):
-        params = init_tree(ARCH.param_defs(SMOKE), jax.random.PRNGKey(0), SMOKE.param_dtype)
+        params = init_tree(
+            ARCH.param_defs(SMOKE), jax.random.PRNGKey(0), SMOKE.param_dtype
+        )
         opt = adamw.init(params)
         ckpt.save(tmp_path, 7, {"params": params, "opt": opt})
         assert ckpt.latest_step(tmp_path) == 7
@@ -136,7 +138,9 @@ class TestElastic:
         from repro.models.common import axes_tree
         from repro.runtime import sharding as shd
 
-        params = init_tree(ARCH.param_defs(SMOKE), jax.random.PRNGKey(0), SMOKE.param_dtype)
+        params = init_tree(
+            ARCH.param_defs(SMOKE), jax.random.PRNGKey(0), SMOKE.param_dtype
+        )
         ckpt.save(tmp_path, 1, {"params": params})
         mesh = make_smoke_mesh()
         with shd.use_rules(mesh):
@@ -148,12 +152,19 @@ class TestElastic:
 
 class TestServing:
     def test_batched_serving_completes_and_matches_decode(self):
-        params = init_tree(ARCH.param_defs(SMOKE), jax.random.PRNGKey(0), SMOKE.param_dtype)
-        eng = serve.Engine(ARCH, SMOKE, params, serve.ServeConfig(batch_size=2, max_seq=64))
+        params = init_tree(
+            ARCH.param_defs(SMOKE), jax.random.PRNGKey(0), SMOKE.param_dtype
+        )
+        eng = serve.Engine(
+            ARCH, SMOKE, params, serve.ServeConfig(batch_size=2, max_seq=64)
+        )
         rng = np.random.default_rng(0)
         reqs = [
-            serve.Request(uid=i, prompt=rng.integers(0, SMOKE.vocab_size, 8).astype(np.int32),
-                          max_new_tokens=6)
+            serve.Request(
+                uid=i,
+                prompt=rng.integers(0, SMOKE.vocab_size, 8).astype(np.int32),
+                max_new_tokens=6,
+            )
             for i in range(5)
         ]
         done = eng.run(reqs)
@@ -180,7 +191,11 @@ class TestCompression:
         from repro.compat import Mesh, PartitionSpec as P, shard_map
 
         mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))
-        g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(16, 16)), jnp.float32)}
+        g = {
+            "w": jnp.asarray(
+                np.random.default_rng(0).normal(size=(16, 16)), jnp.float32
+            )
+        }
         out = shard_map(
             lambda t: compressed_psum(t, "pod"),
             mesh=mesh, in_specs=(P(),), out_specs=P(),
@@ -200,7 +215,9 @@ class TestCompression:
             total_comp = total_comp + comp["w"]
         # accumulated compressed grads converge to accumulated true grads
         rel = float(
-            jnp.linalg.norm(total_comp - steps * g["w"]) / jnp.linalg.norm(steps * g["w"])
+            jnp.linalg.norm(total_comp - steps * g["w"]) / jnp.linalg.norm(
+                steps * g["w"]
+            )
         )
         assert rel < 0.01, rel
 
@@ -214,7 +231,9 @@ class TestDPShardMap:
         from repro.runtime.train_loop import build_train_step
 
         mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
-        params = init_tree(ARCH.param_defs(SMOKE), jax.random.PRNGKey(0), SMOKE.param_dtype)
+        params = init_tree(
+            ARCH.param_defs(SMOKE), jax.random.PRNGKey(0), SMOKE.param_dtype
+        )
         opt = adamw.init(params)
         opt_cfg = adamw.AdamWConfig()
         batch = {

@@ -160,9 +160,7 @@ class TestShardLocalChannel:
     shards=st.sampled_from([2, 4, 8]),
     seed=st.integers(min_value=0, max_value=2**16),
 )
-def test_property_sharded_ideal_bitwise_equals_unsharded(
-    r, k_base, c, shards, seed
-):
+def test_property_sharded_ideal_bitwise_equals_unsharded(r, k_base, c, shards, seed):
     """sum_i shard_i(int_gemm) == unsharded int_gemm == exact, bitwise,
     on both backends: int32 psums are associative and the shard-local
     engine only re-chunks an ideal channel (numerically inert without
@@ -201,9 +199,7 @@ class TestTensorParallelDense:
         base = dense({"w": W}, X, cfg, site="attn.wq")
         with tensor_parallel(mesh, "model"):
             eager = dense({"w": W}, X, cfg, site="attn.wq")
-            jitted = jax.jit(
-                lambda x: dense({"w": W}, x, cfg, site="attn.wq")
-            )(X)
+            jitted = jax.jit(lambda x: dense({"w": W}, x, cfg, site="attn.wq"))(X)
         np.testing.assert_array_equal(np.asarray(base), np.asarray(eager))
         np.testing.assert_array_equal(np.asarray(base), np.asarray(jitted))
 
@@ -227,9 +223,7 @@ class TestTensorParallelDense:
         eng = engine_for(_ideal_dpu(), "pallas")
         defs = {"proj": {"w": W}}
         plain = prepack_params({"proj": {"w": W}}, defs, eng)["proj"]["w"]
-        shard = prepack_params(
-            {"proj": {"w": W}}, defs, eng, mesh=mesh
-        )["proj"]["w"]
+        shard = prepack_params({"proj": {"w": W}}, defs, eng, mesh=mesh)["proj"]["w"]
         np.testing.assert_array_equal(
             np.asarray(plain.w_scale), np.asarray(shard.w_scale)
         )
@@ -282,9 +276,7 @@ class TestTensorParallelDense:
         cfg = ModelConfig(photonic=_ideal_dpu(), photonic_backend="ref")
         with tensor_parallel(mesh, "model"):
             y = dense({"w": W}, X, cfg, site="ffn.router")
-        np.testing.assert_array_equal(
-            np.asarray(y), np.asarray(X @ W)
-        )
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(X @ W))
 
     def test_bad_axis_raises(self):
         mesh = mesh_mod.make_tp_smoke_mesh()
@@ -366,9 +358,7 @@ class TestRuntimeThreading:
             photonic=_noisy_dpu(n=16, noise_seed=11),
             photonic_backend="ref",
         )
-        params = init_tree(
-            arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype
-        )
+        params = init_tree(arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
         eng = serve.Engine(
             arch,
             cfg,
@@ -416,12 +406,8 @@ class TestRuntimeThreading:
 
         mesh = mesh_mod.make_tp_smoke_mesh()
         arch = registry.get("qwen2-0.5b")
-        cfg = _small_lm_cfg(
-            arch, photonic=_ideal_dpu(), photonic_backend="ref"
-        )
-        params = init_tree(
-            arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype
-        )
+        cfg = _small_lm_cfg(arch, photonic=_ideal_dpu(), photonic_backend="ref")
+        params = init_tree(arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
         loss_fn = lambda p, b: arch.loss(p, b, cfg)  # noqa: E731
         batch = {
             "tokens": jnp.arange(8 * 16, dtype=jnp.int32).reshape(8, 16)
@@ -435,9 +421,7 @@ class TestRuntimeThreading:
         plain = jax.jit(loss_fn)(params, batch)
         # the TP GEMMs are bitwise; the surrounding softmax/norm reductions
         # compile into different fusions, so compare at float tolerance
-        np.testing.assert_allclose(
-            float(loss), float(plain), rtol=1e-5, atol=0
-        )
+        np.testing.assert_allclose(float(loss), float(plain), rtol=1e-5, atol=0)
         assert np.isfinite(float(gnorm))
 
     def test_dp_step_rejects_unknown_tp_axis(self):
