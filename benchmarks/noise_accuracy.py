@@ -10,9 +10,9 @@ with analog noise at the level the scalability analysis budgets for
 
 import time
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dpu import DPUConfig, noise_sigma_from_snr, photonic_matmul
 

@@ -25,16 +25,16 @@ crosstalk — degrades no faster than ASMW/MASW at matched N.
 import dataclasses
 import time
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.cnn_workloads import WORKLOADS
 from repro.core.dpu import DPUConfig, photonic_matmul
-from repro.orgs import ORGANIZATIONS
-from repro.kernels.photonic_gemm.ref import exact_int_gemm
 from repro.kernels.photonic_gemm.ops import photonic_gemm_int
+from repro.kernels.photonic_gemm.ref import exact_int_gemm
 from repro.noise import build_channel_model
+from repro.orgs import ORGANIZATIONS
 
 N_SWEEP = (8, 16, 32, 64)
 N_SWEEP_SMOKE = (16,)

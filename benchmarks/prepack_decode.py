@@ -16,9 +16,9 @@ work provably left the hot path, not just got cheaper).
 import dataclasses
 import time
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dpu import DPUConfig
 from repro.models import registry

@@ -22,9 +22,9 @@ Two sweeps, per organization (ASMW / MASW / SMWA):
 
 import time
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dpu import DPUConfig
 from repro.launch import mesh as mesh_mod

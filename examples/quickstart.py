@@ -8,9 +8,9 @@
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import scalability as sc
 from repro.core.dpu import DPUConfig, noise_sigma_from_snr, photonic_matmul

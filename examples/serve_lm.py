@@ -15,8 +15,8 @@ Run:  PYTHONPATH=src python examples/serve_lm.py
 import dataclasses
 import time
 
-import numpy as np
 import jax
+import numpy as np
 
 from repro.core.dpu import DPUConfig
 from repro.models import registry

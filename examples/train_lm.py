@@ -14,7 +14,6 @@ import argparse
 import dataclasses
 import tempfile
 
-
 from repro.core.dpu import DPUConfig
 from repro.data.pipeline import DataConfig
 from repro.models import registry

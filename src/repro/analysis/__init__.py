@@ -1,0 +1,46 @@
+"""repro.analysis — machine-enforced repo contracts (DESIGN.md §12).
+
+Two levels:
+
+* **Level 1 — AST lint** (:mod:`repro.analysis.core`, rules in
+  :mod:`repro.analysis.rules`): six RPR rules codifying the ROADMAP
+  conventions — compat isolation (RPR001), single-point org resolution
+  (RPR002), engine-only GEMM routing (RPR003), engine-derived randomness
+  (RPR004), reciprocal-multiply quantization (RPR005), and the
+  tensor_parallel/shard_map nesting ban (RPR006).
+* **Level 2 — jaxpr contract passes** (:mod:`repro.analysis.contracts`):
+  :class:`ContractChecker` traces a model/engine fn and statically asserts
+  the execution contracts — zero weight-sized rounds in decode, exactly
+  one psum per routed GEMM on sharded paths, noisy channels untraceable
+  without a key source.
+
+CLI: ``python -m repro.analysis`` (the blocking CI lint entry point).
+"""
+
+from repro.analysis.contracts import (
+    ContractChecker,
+    count_primitives,
+    count_weight_round_ops,
+    iter_eqns,
+)
+from repro.analysis.core import (
+    Finding,
+    Rule,
+    all_rules,
+    check_source,
+    register_rule,
+    run_all,
+)
+
+__all__ = [
+    "ContractChecker",
+    "Finding",
+    "Rule",
+    "all_rules",
+    "check_source",
+    "count_primitives",
+    "count_weight_round_ops",
+    "iter_eqns",
+    "register_rule",
+    "run_all",
+]

@@ -1,0 +1,209 @@
+"""Level-2 contract passes: static assertions over traced jaxprs.
+
+Where Level 1 lints *source*, Level 2 checks the *program JAX actually
+traced*: a :class:`ContractChecker` wraps a jaxpr and asserts the
+execution contracts the paper results depend on —
+
+* **weight-stationary decode** — a decode step over prepacked params
+  contains zero weight-sized ``round`` ops (the quantization work provably
+  left the hot path, PR-3);
+* **single psum per routed GEMM** — the sharded integer path reduces each
+  GEMM's int32 partials exactly once in the digital domain (PR-4);
+* **noisy needs a source** — a noisy channel cannot even be traced without
+  a key source (``prng_key`` or ``DPUConfig.noise_seed``), so silent
+  seed-less noise is unrepresentable (PR-2/PR-3).
+
+The traversal (:func:`iter_eqns`) recurses uniformly through every
+sub-jaxpr container — ``pjit``/``scan``/``while``/``cond`` bodies,
+``shard_map`` jaxprs, and the closed call jaxprs of ``custom_jvp`` /
+``custom_vjp`` — on both the 0.4.30 floor and 0.6.x spellings. The old
+``repro.photonic.engine.count_weight_round_ops`` walker missed closed-call
+sub-jaxprs on the floor; it now lives here (re-exported there). Checkers
+built with :meth:`ContractChecker.trace` also expose the HLO-level passes
+of ``repro.launch.hlo_analysis`` (collective wire bytes, GEMM traffic)
+over the *same compiled call*, so jaxpr- and HLO-level assertions agree
+on what program they describe.
+
+Only ``jax`` + ``numpy`` are imported, so this module is usable from the
+engine without an import cycle.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class ContractViolation(AssertionError):
+    """A traced program broke one of the repo's execution contracts."""
+
+
+def _as_jaxpr(jaxpr: Any):
+    """Accept a Jaxpr, a ClosedJaxpr, or anything exposing one of them."""
+    if hasattr(jaxpr, "eqns"):
+        return jaxpr
+    if hasattr(jaxpr, "jaxpr"):
+        return jaxpr.jaxpr
+    raise TypeError(f"expected a Jaxpr or ClosedJaxpr, got {type(jaxpr).__name__}")
+
+
+def _iter_param(value: Any) -> Iterator[Any]:
+    """Yield every (sub-)jaxpr reachable from one eqn param value.
+
+    Handles ClosedJaxpr (pjit's ``jaxpr``, custom_jvp/vjp's ``call_jaxpr``,
+    scan/while bodies), raw Jaxpr (shard_map), and list/tuple containers
+    (cond's ``branches``). Callables (vjp thunks) are opaque and skipped.
+    """
+    if hasattr(value, "jaxpr") and hasattr(value.jaxpr, "eqns"):
+        yield value.jaxpr
+    elif hasattr(value, "eqns"):
+        yield value
+    elif isinstance(value, (list, tuple)):
+        for item in value:
+            yield from _iter_param(item)
+
+
+def iter_eqns(jaxpr: Any) -> Iterator[Any]:
+    """Every equation in ``jaxpr`` and, recursively, in all sub-jaxprs."""
+    jaxpr = _as_jaxpr(jaxpr)
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for value in eqn.params.values():
+            for sub in _iter_param(value):
+                yield from iter_eqns(sub)
+
+
+def count_primitives(jaxpr: Any, name: str, *, substring: bool = False) -> int:
+    """Occurrences of primitive ``name`` across the whole (sub-)jaxpr tree."""
+    n = 0
+    for eqn in iter_eqns(jaxpr):
+        pname = eqn.primitive.name
+        if pname == name or (substring and name in pname):
+            n += 1
+    return n
+
+
+def count_weight_round_ops(jaxpr: Any, min_size: int) -> int:
+    """Rounding ops over arrays of >= ``min_size`` elements, recursing into
+    every sub-jaxpr (pjit, scan/while/cond, shard_map, custom_jvp/vjp).
+
+    The weight-stationary acceptance check: a decode step over prepacked
+    params must contain ZERO weight-sized rounds — the quantization work
+    provably left the hot path rather than merely getting cheaper.
+    """
+    n = 0
+    for eqn in iter_eqns(jaxpr):
+        if "round" not in eqn.primitive.name:
+            continue
+        if any(
+            hasattr(v, "aval") and int(np.prod(v.aval.shape or (1,))) >= min_size
+            for v in eqn.invars
+        ):
+            n += 1
+    return n
+
+
+class ContractChecker:
+    """Static contract assertions over one traced function.
+
+    Build with :meth:`trace` (or directly from a jaxpr); every assertion
+    raises :class:`ContractViolation` with the offending counts, so a
+    failing CI run names the broken contract rather than a numeric diff.
+    """
+
+    def __init__(self, jaxpr: Any, label: str = "<traced fn>"):
+        self.jaxpr = _as_jaxpr(jaxpr)
+        self.label = label
+        self._compile: Optional[Callable[[], Any]] = None
+
+    @classmethod
+    def trace(cls, fn: Callable, *args, label: Optional[str] = None, **kwargs):
+        closed = jax.make_jaxpr(fn)(*args, **kwargs)
+        self = cls(closed, label=label or getattr(fn, "__name__", "<traced fn>"))
+        # Keep a way to lower/compile the same call so the HLO-level passes
+        # (launch.hlo_analysis) run over the identical program.
+        self._compile = lambda: jax.jit(fn).lower(*args, **kwargs).compile()
+        return self
+
+    # -- generic counting ---------------------------------------------------
+    def count(self, primitive: str, *, substring: bool = False) -> int:
+        return count_primitives(self.jaxpr, primitive, substring=substring)
+
+    def primitive_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for eqn in iter_eqns(self.jaxpr):
+            out[eqn.primitive.name] = out.get(eqn.primitive.name, 0) + 1
+        return out
+
+    # -- contract: weight-stationary decode ---------------------------------
+    def weight_round_ops(self, min_size: int) -> int:
+        return count_weight_round_ops(self.jaxpr, min_size)
+
+    def assert_zero_weight_rounds(self, min_size: int) -> "ContractChecker":
+        n = self.weight_round_ops(min_size)
+        if n != 0:
+            raise ContractViolation(
+                f"{self.label}: weight-stationary contract broken — "
+                f"{n} round op(s) over arrays >= {min_size} elements "
+                "(prepacked decode must quantize activations only)"
+            )
+        return self
+
+    # -- contract: one digital psum per routed GEMM --------------------------
+    def assert_psum_per_gemm(self, gemms: int) -> "ContractChecker":
+        n = self.count("psum")
+        if n != gemms:
+            raise ContractViolation(
+                f"{self.label}: sharded-GEMM contract broken — expected "
+                f"exactly {gemms} psum (one per routed GEMM), traced {n}"
+            )
+        return self
+
+    # -- HLO-level passes (delegated to launch.hlo_analysis) ------------------
+    def hlo_text(self) -> str:
+        """Compiled HLO of the traced call (``trace()``-built checkers only)."""
+        if self._compile is None:
+            raise ValueError(
+                f"{self.label}: HLO passes need the original callable — "
+                "build this checker with ContractChecker.trace(fn, *args)"
+            )
+        return self._compile().as_text()
+
+    def collective_summary(self) -> Dict[str, float]:
+        """Loop-adjusted wire bytes per collective kind, from the HLO."""
+        from repro.launch import hlo_analysis
+
+        return hlo_analysis.collective_summary(self.hlo_text())
+
+    def matmul_traffic_bytes(self) -> float:
+        """Fusion-optimal HBM-traffic bound for the GEMMs, from the HLO."""
+        from repro.launch import hlo_analysis
+
+        return hlo_analysis.matmul_traffic_bytes(self.hlo_text())
+
+    # -- contract: noisy channels need a key source --------------------------
+    @staticmethod
+    def assert_untraceable_without_source(
+        fn: Callable, *args, match: str = "randomness source", **kwargs
+    ) -> None:
+        """Assert tracing ``fn`` fails with the documented seed-source error.
+
+        A noisy channel with neither ``prng_key`` nor ``noise_seed`` must
+        raise at *trace time* — noise with an unpinned seed would silently
+        decohere the bitwise-reproducibility story.
+        """
+        try:
+            jax.make_jaxpr(fn)(*args, **kwargs)
+        except ValueError as e:
+            if match in str(e):
+                return
+            raise ContractViolation(
+                f"tracing raised ValueError, but not the documented "
+                f"seed-source error ({match!r}): {e}"
+            ) from e
+        raise ContractViolation(
+            "noisy channel traced without a key source; expected ValueError "
+            f"matching {match!r}"
+        )

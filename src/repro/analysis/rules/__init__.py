@@ -1,0 +1,15 @@
+"""Rule plugins. Importing this package registers every RPR rule.
+
+Each module defines one themed rule (or a small family) and registers it
+via :func:`repro.analysis.core.register_rule`; adding a rule is: create a
+module here, import it below, document the ID in DESIGN.md §12.
+"""
+
+from repro.analysis.rules import (  # noqa: F401
+    compat,
+    engine,
+    orgs,
+    quant,
+    randomness,
+    sharding,
+)

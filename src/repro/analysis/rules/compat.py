@@ -1,0 +1,106 @@
+"""RPR001 — JAX compat-sensitive symbols only inside ``repro/compat.py``.
+
+The symbol inventory is imported from :mod:`repro.compat` itself (the
+``COMPAT_SENSITIVE_*`` registry), so adding a shim and banning direct use
+of the raw symbol are one edit. Replaces the ROADMAP ``rg`` spot-check.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.core import Finding, Rule, dotted_name, register_rule
+from repro.compat import (
+    COMPAT_SENSITIVE_ATTRS,
+    COMPAT_SENSITIVE_KWARGS,
+    COMPAT_SENSITIVE_METHODS,
+    COMPAT_SENSITIVE_MODULES,
+    COMPAT_SENSITIVE_NAMES,
+)
+
+# compat.py holds the shims; test_compat.py exercises the version-sensitive
+# surface on purpose.
+_EXEMPT = ("src/repro/compat.py", "tests/test_compat.py")
+
+
+@register_rule
+class CompatIsolationRule(Rule):
+    id = "RPR001"
+    summary = "version-sensitive JAX symbol referenced outside repro.compat"
+    rationale = (
+        "The runtime supports JAX 0.4.30-0.6.x; symbols that moved or "
+        "changed signature across that range (shard_map, AxisType, "
+        "AbstractMesh, make_mesh, axis_size, TPUCompilerParams, check_rep, "
+        "Compiled.cost_analysis) must be reached through repro.compat so "
+        "every call site works on every supported version."
+    )
+
+    def applies_to(self, relpath: str) -> bool:
+        return relpath not in _EXEMPT
+
+    def check(self, tree: ast.Module, text: str, relpath: str) -> Iterable[Finding]:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name in COMPAT_SENSITIVE_MODULES:
+                        yield self.finding(
+                            relpath,
+                            node,
+                            f"import of version-sensitive module "
+                            f"{alias.name!r}; use repro.compat",
+                        )
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod in COMPAT_SENSITIVE_MODULES:
+                    yield self.finding(
+                        relpath,
+                        node,
+                        f"import from version-sensitive module {mod!r}; "
+                        "use repro.compat",
+                    )
+                elif mod == "jax" or mod.startswith("jax."):
+                    for alias in node.names:
+                        if alias.name in COMPAT_SENSITIVE_NAMES:
+                            yield self.finding(
+                                relpath,
+                                node,
+                                f"from-import of version-sensitive "
+                                f"{alias.name!r} from {mod!r}; import it "
+                                "from repro.compat",
+                            )
+            elif isinstance(node, ast.Attribute):
+                dotted = dotted_name(node)
+                if dotted in COMPAT_SENSITIVE_ATTRS:
+                    yield self.finding(
+                        relpath,
+                        node,
+                        f"{dotted} is version-sensitive; use the "
+                        "repro.compat equivalent",
+                    )
+            elif isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg in COMPAT_SENSITIVE_KWARGS:
+                        yield self.finding(
+                            relpath,
+                            kw.value,
+                            f"keyword {kw.arg!r} is the pre-0.5 spelling; "
+                            "compat.shard_map takes check_vma",
+                        )
+                func = node.func
+                if (
+                    isinstance(func, ast.Attribute)
+                    and func.attr in COMPAT_SENSITIVE_METHODS
+                    and not self._is_compat_receiver(func.value)
+                ):
+                    yield self.finding(
+                        relpath,
+                        node,
+                        f".{func.attr}() return shape is version-dependent; "
+                        f"call compat.{func.attr}(...) instead",
+                    )
+
+    @staticmethod
+    def _is_compat_receiver(value: ast.AST) -> bool:
+        dotted = dotted_name(value)
+        return dotted is not None and (dotted == "compat" or dotted.endswith(".compat"))

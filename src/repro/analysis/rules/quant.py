@@ -1,0 +1,79 @@
+"""RPR005 — quantization paths multiply by a reciprocal, never divide by a
+constant scale.
+
+``x / 127.0`` and ``x * (1.0 / 127.0)`` round differently in the last ulp,
+and XLA rewrites constant-divisor division into reciprocal multiplication
+when compiling — so the divide spelling produces results that differ
+between eager and jitted execution. The repo's bitwise-stability contract
+(eager == compiled, PR-2) requires the reciprocal-multiply spelling
+everywhere a quantization scale is built from constants.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.core import Finding, Rule, register_rule
+
+_CONST_CALLS = frozenset({"float", "int", "min", "max", "abs"})
+
+
+def _is_const_expr(node: ast.AST) -> bool:
+    """Syntactically constant numeric expression (no names, no attributes).
+
+    Names are deliberately NOT constant: ``x / scale`` with a traced scale
+    is the correct second half of the blessed pattern and must never flag.
+    """
+    if isinstance(node, ast.Constant):
+        is_num = isinstance(node.value, (int, float))
+        return is_num and not isinstance(node.value, bool)
+    if isinstance(node, ast.UnaryOp):
+        return _is_const_expr(node.operand)
+    if isinstance(node, ast.BinOp):
+        return _is_const_expr(node.left) and _is_const_expr(node.right)
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return node.func.id in _CONST_CALLS and all(
+            _is_const_expr(a) for a in node.args
+        )
+    return False
+
+
+def _is_literal_one(node: ast.AST) -> bool:
+    return isinstance(node, ast.Constant) and node.value in (1, 1.0)
+
+
+@register_rule
+class ReciprocalQuantRule(Rule):
+    id = "RPR005"
+    summary = "constant-divisor division in a quantization path"
+    rationale = (
+        "XLA rewrites x / const into x * (1/const) when compiling, so the "
+        "division spelling diverges bitwise between eager and jitted "
+        "execution; quantization scales must be built as reciprocal "
+        "multiplies (amax * (1.0 / qmax)) for eager/compiled bit-identity."
+    )
+
+    def applies_to(self, relpath: str) -> bool:
+        # Quantization paths live in src/; test tolerance arithmetic is out
+        # of scope.
+        return relpath.startswith("src/")
+
+    def check(self, tree: ast.Module, text: str, relpath: str) -> Iterable[Finding]:
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if "quant" not in fn.name.lower():
+                continue
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.BinOp) and isinstance(node.op, ast.Div)):
+                    continue
+                if _is_literal_one(node.left):
+                    continue  # 1.0 / qmax IS the reciprocal idiom
+                if _is_const_expr(node.right):
+                    yield self.finding(
+                        relpath,
+                        node,
+                        f"division by constant scale in {fn.name}(); use "
+                        "reciprocal multiply: x * (1.0 / const)",
+                    )

@@ -1,0 +1,65 @@
+"""RPR004 — models/kernels draw no randomness outside the engine's streams.
+
+Noise in the photonic channel is keyed per (site, layer, shard) by the
+engine's seed derivation (``stream_seed`` / ``DPUConfig.noise_seed_array``)
+so runs are reproducible and shards decorrelate deterministically. A model
+or kernel sampling from ``jax.random`` on the side forks the stream and
+breaks the bitwise-stability story. Parameter initialization (``init*``
+functions, host-side setup) is exempt, as is pure key plumbing.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.core import (
+    Finding,
+    Rule,
+    dotted_name,
+    enclosing_functions,
+    register_rule,
+)
+
+# Key plumbing — allowed everywhere (moving keys around samples nothing).
+_KEY_PLUMBING = frozenset(
+    {"PRNGKey", "key", "split", "fold_in", "key_data", "wrap_key_data", "clone"}
+)
+
+_SCOPED_PREFIXES = ("src/repro/models/", "src/repro/kernels/")
+
+
+@register_rule
+class ModelRandomnessRule(Rule):
+    id = "RPR004"
+    summary = "jax.random sampling in models/kernels outside init paths"
+    rationale = (
+        "All model/kernel randomness must come from the engine's seed "
+        "derivation (stream_seed / noise_seed_array) so noise streams are "
+        "(site, layer, shard)-keyed and reproducible; ad-hoc jax.random "
+        "sampling forks the stream."
+    )
+
+    def applies_to(self, relpath: str) -> bool:
+        return relpath.startswith(_SCOPED_PREFIXES)
+
+    def check(self, tree: ast.Module, text: str, relpath: str) -> Iterable[Finding]:
+        enclosing = enclosing_functions(tree)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            dotted = dotted_name(node)
+            if dotted is None or not dotted.startswith("jax.random."):
+                continue
+            leaf = dotted.rsplit(".", 1)[1]
+            if leaf in _KEY_PLUMBING:
+                continue
+            fns = enclosing.get(node, [])
+            if any(f.name.lstrip("_").startswith("init") for f in fns):
+                continue  # parameter initialization is host-side setup
+            yield self.finding(
+                relpath,
+                node,
+                f"{dotted} sampled outside an init path; derive randomness "
+                "from the engine stream (stream_seed / noise_seed_array)",
+            )

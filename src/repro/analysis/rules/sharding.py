@@ -1,0 +1,80 @@
+"""RPR006 — no ``tensor_parallel`` context inside a ``shard_map`` body.
+
+``tensor_parallel(mesh, axis)`` installs the *device-level* sharded-GEMM
+scope (it enters a mesh and shards via collectives issued by shard_map
+wrappers it builds itself); entering it inside an already-manual
+``shard_map`` body nests manual collectives and deadlocks or double-reduces.
+Inside a shard_map body the blessed scope is ``manual_tp(axis)``, which
+only tags the axis for the engine's shard-local channel model.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List
+
+from repro.analysis.core import Finding, Rule, register_rule
+
+_BANNED = "tensor_parallel"
+
+
+def _callee_name(func: ast.AST) -> str:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def _uses_banned(node: ast.AST) -> List[ast.AST]:
+    hits = []
+    for sub in ast.walk(node):
+        if isinstance(sub, (ast.Name, ast.Attribute)):
+            name = sub.id if isinstance(sub, ast.Name) else sub.attr
+            if name == _BANNED:
+                hits.append(sub)
+    return hits
+
+
+@register_rule
+class ShardMapNestingRule(Rule):
+    id = "RPR006"
+    summary = "tensor_parallel entered inside a shard_map body"
+    rationale = (
+        "tensor_parallel is a device-level scope (it builds its own "
+        "shard_map wrappers); nesting it under an explicit shard_map body "
+        "double-issues collectives. Use manual_tp(axis) inside shard_map "
+        "bodies."
+    )
+
+    def check(self, tree: ast.Module, text: str, relpath: str) -> Iterable[Finding]:
+        # Map function name -> def node, per enclosing scope is overkill for
+        # this codebase; module-wide name resolution is sufficient and errs
+        # toward flagging.
+        defs: Dict[str, ast.AST] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, node)
+
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _callee_name(node.func) != "shard_map":
+                continue
+            if not node.args:
+                continue
+            body = node.args[0]
+            target: ast.AST | None = None
+            if isinstance(body, ast.Lambda):
+                target = body.body
+            elif isinstance(body, ast.Name) and body.id in defs:
+                target = defs[body.id]
+            if target is None:
+                continue
+            for hit in _uses_banned(target):
+                yield self.finding(
+                    relpath,
+                    hit,
+                    "tensor_parallel inside a shard_map body; use "
+                    "manual_tp(axis) for in-shard scopes",
+                )

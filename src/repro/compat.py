@@ -32,6 +32,50 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec  # noqa: F401
 
 
+# ---------------------------------------------------------------------------
+# The compat-sensitivity registry. ONE list of the JAX symbols whose name,
+# location, or signature changed across the supported 0.4.x–0.6.x range.
+# repro.analysis rule RPR001 reads these to forbid any reference outside this
+# module (replacing the old ROADMAP `rg` spot-check); keeping the data here
+# means adding a shim and banning direct use are the same edit.
+# ---------------------------------------------------------------------------
+
+# Dotted attribute paths that must never be spelled at call sites.
+COMPAT_SENSITIVE_ATTRS = frozenset(
+    {
+        "jax.shard_map",  # 0.5+ only (0.4.x: jax.experimental.shard_map)
+        "jax.experimental.shard_map.shard_map",
+        "jax.sharding.AxisType",  # 0.5+ only
+        "jax.sharding.AbstractMesh",  # ctor signature flipped at 0.5
+        "jax.make_mesh",  # axis_types= param is 0.5+ only
+        "jax.lax.axis_size",  # 0.5+ only
+    }
+)
+
+# Modules that must not be imported (their contents moved).
+COMPAT_SENSITIVE_MODULES = frozenset({"jax.experimental.shard_map"})
+
+# Names that must not be from-imported out of any jax.* module.
+COMPAT_SENSITIVE_NAMES = frozenset(
+    {
+        "shard_map",
+        "AxisType",
+        "AbstractMesh",
+        "make_mesh",
+        "axis_size",
+        "TPUCompilerParams",  # renamed CompilerParams at 0.5
+        "CompilerParams",
+    }
+)
+
+# Keyword arguments whose spelling is version-dependent (check_rep became
+# check_vma; compat.shard_map accepts only the new spelling).
+COMPAT_SENSITIVE_KWARGS = frozenset({"check_rep"})
+
+# Methods whose return shape is version-dependent; call the wrapper instead.
+COMPAT_SENSITIVE_METHODS = frozenset({"cost_analysis"})
+
+
 def _version_tuple(v: str) -> tuple:
     parts = []
     for piece in v.split(".")[:3]:

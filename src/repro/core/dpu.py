@@ -47,7 +47,6 @@ import jax.numpy as jnp
 
 from repro.core import scalability
 from repro.core.params import PhotonicParams
-from repro.orgs import OrgSpec, resolve
 from repro.noise.channel import (
     ChannelModel,
     analog_pass_psums,
@@ -59,6 +58,7 @@ from repro.noise.stages import (
     key_zero_cotangent,
     seed_from_key,
 )
+from repro.orgs import OrgSpec, resolve
 
 
 @dataclasses.dataclass(frozen=True)

@@ -22,12 +22,7 @@ import itertools
 import math
 from typing import Dict, Iterable, Tuple
 
-from repro.core.params import (
-    K_BOLTZMANN,
-    PhotonicParams,
-    Q_ELECTRON,
-    watts_to_dbm,
-)
+from repro.core.params import K_BOLTZMANN, Q_ELECTRON, PhotonicParams, watts_to_dbm
 from repro.orgs import ORGANIZATIONS, OrgSpec, resolve
 
 # Paper Table V — DPU size N at 4-bit precision (targets for calibration /

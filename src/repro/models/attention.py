@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common as cm
-from repro.models.common import ModelConfig, P, apply_rope, dense, qdense_def
+from repro.models.common import P, ModelConfig, apply_rope, dense, qdense_def
 
 
 # ---------------------------------------------------------------------------
@@ -207,7 +207,7 @@ def _quantize_kv(x):
     DESIGN.md §3 beyond-paper extension, exercised as §Perf HC-C."""
     xf = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(xf), axis=-1)
-    scale = jnp.maximum(amax, 1e-12) / 127.0
+    scale = jnp.maximum(amax, 1e-12) * (1.0 / 127.0)
     q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
     return q, scale
 

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common as cm
-from repro.models.common import ModelConfig, P, dense, qdense_def
+from repro.models.common import P, ModelConfig, dense, qdense_def
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.models import attention as attn
 from repro.models import common as cm
 from repro.models import ffn
-from repro.models.common import ModelConfig, P
+from repro.models.common import P, ModelConfig
 
 
 # ---------------------------------------------------------------------------

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common as cm
-from repro.models.common import ModelConfig, P, dense, dense_def, qdense_def
+from repro.models.common import P, ModelConfig, dense, dense_def, qdense_def
 
 
 def _inner(cfg: ModelConfig) -> int:

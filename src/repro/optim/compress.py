@@ -26,7 +26,7 @@ def _quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
     if g.size == 0:  # zero-layer ladder variants produce (0, ...) leaves
         return g.astype(jnp.int8), jnp.ones((), jnp.float32)
     amax = jnp.max(jnp.abs(g)).astype(jnp.float32)
-    scale = jnp.maximum(amax, 1e-12) / 127.0
+    scale = jnp.maximum(amax, 1e-12) * (1.0 / 127.0)
     q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
     return q, scale
 

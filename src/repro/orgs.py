@@ -157,7 +157,7 @@ class OrgSpec:
     @classmethod
     def from_order(cls, order: str) -> "OrgSpec":
         """Spec from a four-letter order string (case-insensitive)."""
-        return _from_order_cached(order.strip().upper())
+        return _from_order_cached(_normalize_order(order))
 
     def before(self, a: str, b: str) -> bool:
         """True when block ``a`` precedes block ``b`` in this order."""
@@ -283,6 +283,17 @@ class OrgSpec:
         return self.name
 
 
+def _normalize_order(order: str) -> str:
+    """Canonicalize an order/organization string (strip + casefold to upper).
+
+    THE single blessed normalization site for org-typed strings: both
+    ``OrgSpec.from_order`` and ``resolve`` route through it, so case
+    handling cannot drift between the two entry points (RPR002 forbids
+    ad-hoc ``.upper()`` on org strings anywhere else).
+    """
+    return order.strip().upper()
+
+
 @functools.lru_cache(maxsize=None)
 def _from_order_cached(order: str) -> OrgSpec:
     if len(order) != 4:
@@ -339,7 +350,7 @@ def resolve(org: Union[str, OrgSpec]) -> OrgSpec:
         raise ValueError(
             f"organization must be a str or OrgSpec, got {type(org).__name__}"
         )
-    name = org.strip().upper()
+    name = _normalize_order(org)
     spec = _REGISTRY.get(name)
     if spec is not None:
         return spec

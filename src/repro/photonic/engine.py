@@ -40,6 +40,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+# Moved to the Level-2 contract passes in PR-6; re-exported for existing
+# call sites (tests, benchmarks) that import it from the engine.
+from repro.analysis.contracts import count_weight_round_ops  # noqa: F401
 from repro.core.dpu import DPUConfig, quantize_symmetric
 from repro.kernels.photonic_gemm.kernel import photonic_gemm_pallas
 from repro.kernels.photonic_gemm.ref import exact_int_gemm, photonic_gemm_ref
@@ -336,36 +339,6 @@ class PhotonicEngine:
         fold = None if fold is None else jnp.asarray(fold, jnp.int32)
         meta = (self, site, packed.k, packed.c, packed.tiling)
         return _packed_matmul(meta, x, packed.wq, packed.w_scale, fold, prng_key)
-
-
-def count_weight_round_ops(jaxpr, min_size: int) -> int:
-    """Rounding ops over arrays of >= ``min_size`` elements in a jaxpr,
-    recursing into sub-jaxprs (scan bodies, custom_vjp calls, ...).
-
-    The weight-stationary acceptance check: a decode step over prepacked
-    params must contain ZERO weight-sized rounds — the quantization work
-    provably left the hot path rather than merely getting cheaper.
-    """
-    import numpy as np
-
-    n = 0
-    for eqn in jaxpr.eqns:
-        if "round" in eqn.primitive.name:
-            if any(
-                hasattr(v, "aval")
-                and int(np.prod(v.aval.shape or (1,))) >= min_size
-                for v in eqn.invars
-            ):
-                n += 1
-        for v in eqn.params.values():
-            for sub in jax.tree_util.tree_leaves(
-                v, is_leaf=lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr")
-            ):
-                if hasattr(sub, "eqns"):
-                    n += count_weight_round_ops(sub, min_size)
-                elif hasattr(sub, "jaxpr"):
-                    n += count_weight_round_ops(sub.jaxpr, min_size)
-    return n
 
 
 @functools.lru_cache(maxsize=None)

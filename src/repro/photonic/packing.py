@@ -28,8 +28,8 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.photonic.engine import PhotonicEngine, pallas_tiling
 from repro.core.dpu import quantize_symmetric
+from repro.photonic.engine import PhotonicEngine, pallas_tiling
 
 
 @jax.tree_util.register_pytree_node_class

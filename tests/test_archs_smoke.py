@@ -7,9 +7,9 @@ consistency against the teacher-forced full forward.
 
 import dataclasses
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.models import lm, registry, whisper, xlstm, zamba2

@@ -3,9 +3,9 @@ seed-determinism contract of `dpu_int_gemm`."""
 
 import dataclasses
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core.dpu import (

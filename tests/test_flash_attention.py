@@ -1,7 +1,7 @@
 """Flash-attention Pallas kernel vs oracle, sweeping shapes/dtypes/GQA."""
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
 

@@ -122,7 +122,11 @@ class TestChannelModelEquivalence:
     def test_spec_and_name_build_identical_models(self, org):
         by_name = build_channel_model(org, n=21, bits=4, datarate_gs=5.0)
         by_spec = build_channel_model(resolve(org), n=21, bits=4, datarate_gs=5.0)
-        by_case = build_channel_model(org.lower(), n=21, bits=4, datarate_gs=5.0)
+        # Deliberately un-normalized input: the point is that resolve()
+        # normalizes it.
+        by_case = build_channel_model(
+            org.lower(), n=21, bits=4, datarate_gs=5.0  # repro: noqa[RPR002]
+        )
         # Frozen-dataclass equality covers every field INCLUDING the
         # builder provenance tuple.
         assert by_name == by_spec == by_case

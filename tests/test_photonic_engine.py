@@ -3,9 +3,9 @@ routing (DESIGN.md §9 contracts)."""
 
 import dataclasses
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core.dpu import DPUConfig

@@ -1,9 +1,9 @@
 """Kernel sweep: Pallas photonic GEMM vs the pure-jnp oracle, plus DPU
 datapath invariants (property-based)."""
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
@@ -15,11 +15,11 @@ from repro.core.dpu import (
     photonic_matmul_ste,
     quantize_symmetric,
 )
+from repro.kernels.photonic_gemm.ops import photonic_gemm, photonic_gemm_int
 from repro.kernels.photonic_gemm.ref import (
     exact_int_gemm,
     slice_decompose,
 )
-from repro.kernels.photonic_gemm.ops import photonic_gemm, photonic_gemm_int
 
 
 def _rand_int8(rng, shape):

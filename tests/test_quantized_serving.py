@@ -2,9 +2,9 @@
 
 import dataclasses
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core.dpu import DPUConfig

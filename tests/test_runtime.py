@@ -4,9 +4,9 @@ compression."""
 
 import dataclasses
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.checkpoint import ckpt

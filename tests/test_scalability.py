@@ -5,8 +5,8 @@ import math
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core import scalability as sc
 from repro.core import organizations as orgs
+from repro.core import scalability as sc
 from repro.core.params import PhotonicParams
 
 

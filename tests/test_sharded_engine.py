@@ -20,12 +20,10 @@ that forces ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
 import dataclasses
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
-
-from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.core.dpu import DPUConfig
 from repro.kernels.photonic_gemm.ref import exact_int_gemm
@@ -40,6 +38,7 @@ from repro.photonic import (
     shard_local_engine,
     tensor_parallel,
 )
+from tests._hypothesis_compat import given, settings, strategies as st
 
 TP = mesh_mod.max_tp_degree()  # 1 on bare CPU; 8 in the multi-device CI leg
 

@@ -3,6 +3,7 @@ ZeRO-1 axes, rule overrides)."""
 
 import jax
 import numpy as np
+
 from repro.compat import Mesh, PartitionSpec as P, abstract_mesh
 from repro.runtime import sharding as shd
 
