@@ -33,6 +33,7 @@ def main(argv=None) -> None:
         org_accuracy,
         org_design_space,
         prepack_decode,
+        serve_latency,
         table5_dpu,
         tp_scaling,
     )
@@ -45,6 +46,7 @@ def main(argv=None) -> None:
         ("org_accuracy", org_accuracy.main),
         ("org_design_space", org_design_space.main),
         ("prepack_decode", prepack_decode.main),
+        ("serve_latency", serve_latency.main),
         ("tp_scaling", tp_scaling.main),
     ]
     # roofline report requires dry-run results; degrade gracefully.

@@ -1,13 +1,18 @@
 """End-to-end serving driver (the paper's kind: inference).
 
-Serves a reduced qwen2-0.5b through the batched continuous-batching engine,
-with every weight GEMM routed through the photonic SMWA DPU datapath
-(int8, bit-sliced, psum-chunked) — then repeats with the exact float path
-and reports agreement + throughput.
+Serves a reduced qwen2-0.5b through the paged continuous-batching
+scheduler (``repro.serving``: block KV cache + chunked prefill
+interleaved with decode, DESIGN.md §13), with every weight GEMM routed
+through the photonic SMWA DPU datapath (int8, bit-sliced, psum-chunked)
+— then repeats with the exact float path and reports agreement +
+throughput.
 
-The serving engine is weight-stationary: at construction it prepacks every
+The scheduler is weight-stationary: at construction it prepacks every
 policy-routed weight once (``repro.photonic.packing``), so decode steps
 stream activations against packed int8 banks and never re-quantize.
+Prompts are mixed-length on purpose: the long ones prefill in
+token-budgeted chunks while the short ones keep decoding, so no request
+waits behind another's prompt.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -21,7 +26,7 @@ import numpy as np
 from repro.core.dpu import DPUConfig
 from repro.models import registry
 from repro.models.common import init_tree
-from repro.runtime import serve
+from repro.serving import Request, Scheduler, ServingConfig
 
 
 def run(photonic: bool, params, arch, cfg, prompts):
@@ -31,17 +36,20 @@ def run(photonic: bool, params, arch, cfg, prompts):
             photonic=DPUConfig(organization="SMWA", bits=4, datarate_gs=5.0),
             photonic_backend="ref",
         )
-    eng = serve.Engine(arch, cfg, params, serve.ServeConfig(batch_size=4, max_seq=64))
-    if eng.photonic is not None:
-        print(f"  engine: {eng.photonic.describe()} (weights prepacked once)")
-    reqs = [
-        serve.Request(uid=i, prompt=p, max_new_tokens=8) for i, p in enumerate(prompts)
-    ]
+    sch = Scheduler(
+        arch,
+        cfg,
+        params,
+        ServingConfig(batch_size=4, max_seq=64, block_size=16, chunk_tokens=16),
+    )
+    if sch.photonic is not None:
+        print(f"  engine: {sch.photonic.describe()} (weights prepacked once)")
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=8) for i, p in enumerate(prompts)]
     t0 = time.time()
-    eng.run(reqs)
+    sch.run(reqs)
     dt = time.time() - t0
     toks = sum(len(r.output) for r in reqs)
-    return reqs, toks / dt, eng.stats
+    return reqs, toks / dt, sch.stats
 
 
 def main():
@@ -49,7 +57,8 @@ def main():
     cfg = dataclasses.replace(arch.smoke_config, remat=False)
     params = init_tree(arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32) for _ in range(8)]
+    lengths = [8, 40, 8, 8, 40, 8, 8, 8]  # long prompts chunk; short ones don't wait
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32) for n in lengths]
 
     exact_reqs, exact_tps, stats = run(False, params, arch, cfg, prompts)
     print(f"float path:    {exact_tps:8.1f} tok/s  {stats}")

@@ -11,5 +11,6 @@ from repro.analysis.rules import (  # noqa: F401
     orgs,
     quant,
     randomness,
+    serving,
     sharding,
 )

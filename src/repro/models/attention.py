@@ -288,6 +288,131 @@ def gqa_cache_def(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Dict[str
 
 
 # ---------------------------------------------------------------------------
+# Paged GQA (repro.serving): block-table KV access, per-request positions
+# ---------------------------------------------------------------------------
+def _kv_rows(k, v, cfg: ModelConfig, batch_axis: int):
+    """Cache rows (+ int8 scales) for computed K/V, batch axis dropped."""
+    if cfg.kv_cache_int8:
+        qk, sk = _quantize_kv(k)
+        qv, sv = _quantize_kv(v)
+        rows = {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
+    else:
+        rows = {"k": k, "v": v}
+    return jax.tree.map(lambda r: jnp.squeeze(r, batch_axis), rows)
+
+
+def _kv_view(g, cfg: ModelConfig):
+    """Float K/V view of a gathered cache slab (dequantizing int8 KV)."""
+    if cfg.kv_cache_int8:
+        kf = g["k"].astype(jnp.float32) * g["k_scale"][..., None]
+        vf = g["v"].astype(jnp.float32) * g["v_scale"][..., None]
+        return kf, vf
+    return g["k"].astype(jnp.float32), g["v"].astype(jnp.float32)
+
+
+def gqa_prefill_chunk(
+    params,
+    x: jax.Array,  # (1, tc, D) — one request's chunk
+    kv_pool,  # per-layer pool leaves (num_blocks, bs, kv, hd)
+    block_table: jax.Array,  # (W,) int32 — the request's table row
+    t0: jax.Array,  # scalar int32 — chunk start (flat position)
+    cfg: ModelConfig,
+    *,
+    t_full: int,  # static total prompt length (gather width)
+    block_size: int,
+    positions,  # (tc,) int32 — t0 + arange(tc)
+    layer=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One chunk of a chunked prefill: compute this chunk's K/V, scatter
+    them into the paged pool, and attend over cache rows ``[0, t_full)``.
+
+    Feeding ``chunked_attention`` exactly ``t_full`` KV rows reproduces the
+    one-shot prefill's block partition (``chunk = min(attn_chunk, tk)``), so
+    the float path is bitwise-identical to ``gqa_prefill`` per query; rows
+    past the written prefix read as zeros off the null block and sit under
+    the causal mask (``exp(-1e30 - m)`` underflows to exactly 0).  When one
+    chunk covers the whole prompt the in-chunk K/V are used directly — the
+    literal ``gqa_prefill`` computation, bitwise even for int8 KV (which
+    otherwise round-trips prior chunks through the quantized pool).
+    """
+    from repro.serving import kv_cache as kvc
+
+    h, kv = cfg.n_q_heads, cfg.num_kv_heads
+    tc = x.shape[1]
+    q = _split_heads(dense(params["wq"], x, cfg, site="attn.wq", layer=layer), h)
+    k = _split_heads(dense(params["wk"], x, cfg, site="attn.wk", layer=layer), kv)
+    v = _split_heads(dense(params["wv"], x, cfg, site="attn.wv", layer=layer), kv)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    blocks, offsets = kvc.chunk_dest(block_table, t0, tc, block_size)
+    kv_pool = kvc.scatter_kv(kv_pool, blocks, offsets, _kv_rows(k, v, cfg, 0))
+
+    if t_full == tc:
+        kf, vf = k, v  # single chunk covers the prompt: legacy math exactly
+        q_offset = 0
+    else:
+        kf, vf = _kv_view(kvc.gather_kv(kv_pool, block_table[None], t_full), cfg)
+        q_offset = t0
+    out = chunked_attention(
+        q, kf, vf, causal=True, q_offset=q_offset,
+        chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
+        acc_dtype=jnp.float32 if cfg.attn_f32 else jnp.bfloat16,
+    )
+    out = dense(
+        params["wo"], out.reshape(1, tc, -1), cfg, site="attn.wo", layer=layer
+    )
+    return out, kv_pool
+
+
+def gqa_decode_paged(
+    params,
+    x: jax.Array,  # (B, 1, D)
+    kv_pool,  # per-layer pool leaves (num_blocks, bs, kv, hd)
+    block_table: jax.Array,  # (B, W) int32
+    pos: jax.Array,  # (B,) int32 — per-request cache length
+    blocks: jax.Array,  # (B,) int32 — precomputed write destinations
+    offsets: jax.Array,  # (B,) int32
+    cfg: ModelConfig,
+    *,
+    gather_len: int,
+    layer=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """``gqa_decode`` generalized to per-request positions over the paged
+    pool: scatter the new token's K/V through the block table, gather a
+    contiguous ``(B, gather_len)`` view, and attend under a per-row causal
+    mask ``kv_pos <= pos[b]``.  With uniform ``pos`` this is bitwise the
+    legacy decode (same shapes, same masked softmax, same int8 round-trip).
+    """
+    from repro.serving import kv_cache as kvc
+
+    h, kv = cfg.n_q_heads, cfg.num_kv_heads
+    b = x.shape[0]
+    q = _split_heads(dense(params["wq"], x, cfg, site="attn.wq", layer=layer), h)
+    k1 = _split_heads(dense(params["wk"], x, cfg, site="attn.wk", layer=layer), kv)
+    v1 = _split_heads(dense(params["wv"], x, cfg, site="attn.wv", layer=layer), kv)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k1 = apply_rope(k1, pos[:, None], cfg.rope_theta)
+
+    kv_pool = kvc.scatter_kv(kv_pool, blocks, offsets, _kv_rows(k1, v1, cfg, 1))
+    kf, vf = _kv_view(kvc.gather_kv(kv_pool, block_table, gather_len), cfg)
+
+    kf = _repeat_kv(kf, h // kv)
+    vf = _repeat_kv(vf, h // kv)
+    qf = q.astype(jnp.float32) * (cfg.hd ** -0.5)
+    s = jnp.einsum("bqhd,bshd->bhqs", qf, kf, preferred_element_type=jnp.float32)
+    kv_pos = jnp.arange(gather_len)
+    s = jnp.where((kv_pos[None, :] <= pos[:, None])[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, vf, preferred_element_type=jnp.float32)
+    out = dense(
+        params["wo"], out.reshape(b, 1, -1).astype(x.dtype), cfg,
+        site="attn.wo", layer=layer,
+    )
+    return out, kv_pool
+
+
+# ---------------------------------------------------------------------------
 # Cross-attention (vision / whisper decoder): static memory, no RoPE on kv
 # ---------------------------------------------------------------------------
 def cross_attention(

@@ -383,6 +383,115 @@ def lm_decode(params, token: jax.Array, caches, cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
+# Serving over the paged pool (repro.serving): chunked prefill, paged decode
+# ---------------------------------------------------------------------------
+def _check_paged_support(cfg: ModelConfig) -> None:
+    if cfg.mla or cfg.cross_attn_every:
+        raise ValueError(
+            "paged serving covers the GQA self-attention stack only "
+            "(no MLA latent caches / vision cross-attention); serve these "
+            "families through the legacy fixed-slot engine"
+        )
+
+
+def _paged_head(params, x, cfg: ModelConfig):
+    x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return cm.unembed(params["embed"], x, cfg)
+    return cm.dense(params["lm_head"], x, cfg, site="lm_head")
+
+
+def lm_prefill_chunk(
+    params,
+    tokens: jax.Array,  # (1, tc) — one request's chunk
+    kv_pool,  # stacked pool: leaves (layers, num_blocks, bs, ...)
+    block_table: jax.Array,  # (W,) int32
+    t0: jax.Array,  # scalar int32 — chunk start
+    cfg: ModelConfig,
+    *,
+    t_full: int,  # static total prompt length
+    block_size: int,
+    with_logits: bool,
+):
+    """One chunked-prefill step: run chunk tokens ``[t0, t0 + tc)`` of a
+    single prompt, scattering each layer's K/V into the paged pool.  Only
+    the prompt-final chunk pays for the LM head (``with_logits``); earlier
+    chunks return ``None`` logits.  Returns ``(logits, kv_pool)``."""
+    _check_paged_support(cfg)
+    tc = tokens.shape[1]
+    x = cm.embed(params["embed"], tokens, cfg)
+    positions = t0 + jnp.arange(tc, dtype=jnp.int32)
+
+    def body(x, inp):
+        p, pc, idx = inp
+        h = cm.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        a, pc = attn.gqa_prefill_chunk(
+            p["attn"], h, pc, block_table, t0, cfg,
+            t_full=t_full, block_size=block_size, positions=positions, layer=idx,
+        )
+        x = x + a
+        h = cm.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if "router" in p["ffn"]:
+            f, _ = ffn.moe(p["ffn"], h, cfg, layer=idx)
+        else:
+            f = ffn.mlp(p["ffn"], h, cfg, layer=idx)
+        return cm.with_logical(x + f, ("batch", "seq_sp", None)), pc
+
+    n = _stack_len(params["layers"])
+    x, kv_pool = jax.lax.scan(
+        body, x, (params["layers"], kv_pool, jnp.arange(n))
+    )
+    logits = _paged_head(params, x[:, -1:, :], cfg) if with_logits else None
+    return logits, kv_pool
+
+
+def lm_decode_paged(
+    params,
+    token: jax.Array,  # (B, 1) int32
+    kv_pool,  # stacked pool: leaves (layers, num_blocks, bs, ...)
+    block_table: jax.Array,  # (B, W) int32
+    pos: jax.Array,  # (B,) int32 — per-request cache length
+    active: jax.Array,  # (B,) bool
+    trash_blocks: jax.Array,  # (B,) int32
+    cfg: ModelConfig,
+    *,
+    gather_len: int,
+    block_size: int,
+):
+    """One decode step over the paged pool with *per-request* positions —
+    the continuous-batching decode: rows mid-prefill or without a live
+    request redirect their K/V write to a private trash block and their
+    (discarded) output attends only to the zero null block.  Returns
+    ``(logits (B, 1, V), kv_pool)``."""
+    _check_paged_support(cfg)
+    from repro.serving import kv_cache as kvc
+
+    blocks, offsets = kvc.token_dest(block_table, pos, active, trash_blocks, block_size)
+    x = cm.embed(params["embed"], token, cfg)
+
+    def body(x, inp):
+        p, pc, idx = inp
+        h = cm.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        a, pc = attn.gqa_decode_paged(
+            p["attn"], h, pc, block_table, pos, blocks, offsets, cfg,
+            gather_len=gather_len, layer=idx,
+        )
+        x = x + a
+        h = cm.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if "router" in p["ffn"]:
+            f, _ = ffn.moe(p["ffn"], h, cfg, layer=idx)
+        else:
+            f = ffn.mlp(p["ffn"], h, cfg, layer=idx)
+        return x + f, pc
+
+    n = _stack_len(params["layers"])
+    x, kv_pool = jax.lax.scan(
+        body, x, (params["layers"], kv_pool, jnp.arange(n))
+    )
+    return _paged_head(params, x, cfg), kv_pool
+
+
+# ---------------------------------------------------------------------------
 # Cache shape/axes definitions (for dry-run input_specs)
 # ---------------------------------------------------------------------------
 def lm_cache_def(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Dict[str, Any]:

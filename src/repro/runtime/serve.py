@@ -1,18 +1,17 @@
-"""Batched serving engine: continuous batching over fixed decode slots.
+"""Serving entry point (compatibility wrapper over ``repro.serving``).
 
-The engine keeps ``batch_size`` decode slots.  Requests queue up; free slots
-are filled by prefilling the prompt (one prefill per admission — left-padded
-into the shared KV cache), then all active slots advance together through
-``decode`` steps (one token per step for the whole batch).  Finished slots
-(EOS or max tokens) are immediately recycled — the vLLM-style continuous
-batching pattern, reduced to its JAX-functional core.
+``Engine`` keeps the original constructor/run surface but routes the dense
+GQA LM families onto the paged-KV continuous-batching scheduler
+(``repro.serving.Scheduler``, DESIGN.md §13): block-granular KV memory,
+chunked prefill interleaved with batched decode, and per-request sampling
+streams.  Families the paged path does not cover (MLA latent caches,
+vision cross-attention, SSM/hybrid/audio) fall back to ``LegacyEngine`` —
+the original fixed-slot loop, kept verbatim as the baseline the serving
+tests and the ``serve_latency`` benchmark compare against.
 
-For per-slot admission the cache must be *batch-indexable*: we prefill a
-single-row cache and scatter it into the batch cache at the slot index.
-
-Photonic serving is *weight-stationary*: at engine construction every
-policy-routed weight is prepacked (int8 + per-column scale, tile-padded
-for the Pallas backend) via ``repro.photonic.packing.prepack_params``, so
+Both paths share the weight-stationary prepack
+(``repro.serving.prepack_serving_params``): with a photonic engine
+configured, every policy-routed weight packs ONCE at construction, so
 steady-state decode performs zero weight-quantization work — the software
 analogue of programming the DPU weight MRR banks once per tile.
 """
@@ -21,22 +20,20 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import List, Optional
+import time
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.serving.scheduler import (
+    Request,
+    Scheduler,
+    ServingConfig,
+    prepack_serving_params,
+)
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray          # (T,) int32
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
-    # filled by the engine
-    output: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+__all__ = ["Request", "ServeConfig", "Engine", "LegacyEngine"]
 
 
 @dataclasses.dataclass
@@ -46,6 +43,13 @@ class ServeConfig:
     greedy: bool = True
     temperature: float = 1.0
     seed: int = 0
+
+
+def _paged_block_size(max_seq: int) -> int:
+    for b in (16, 8, 4, 2, 1):
+        if max_seq % b == 0:
+            return b
+    raise AssertionError  # unreachable: 1 always divides
 
 
 class Engine:
@@ -59,9 +63,84 @@ class Engine:
         mesh=None,
         tp_axis: str = "model",
     ):
-        from repro.models.common import engine_from_model_config
-        from repro.photonic.packing import prepack_params
+        self.arch = arch
+        self.model_cfg = model_cfg
+        self.cfg = cfg
+        paged = (
+            getattr(arch, "family", None) == "dense"
+            and not model_cfg.mla
+            and not model_cfg.cross_attn_every
+        )
+        if paged:
+            # Legacy-compatible scheduler setup: a chunk budget of a full
+            # wave (batch_size * max_seq tokens) admits and fully prefills
+            # every free slot before the step's decode, preserving the old
+            # engine's admission order.  Callers that want chunked-prefill
+            # interleaving construct repro.serving.Scheduler directly.
+            scfg = ServingConfig(
+                batch_size=cfg.batch_size,
+                max_seq=cfg.max_seq,
+                block_size=_paged_block_size(cfg.max_seq),
+                chunk_tokens=cfg.batch_size * cfg.max_seq,
+                greedy=cfg.greedy,
+                temperature=cfg.temperature,
+                seed=cfg.seed,
+            )
+            self.impl = Scheduler(
+                arch, model_cfg, params, scfg, mesh=mesh, tp_axis=tp_axis
+            )
+        else:
+            self.impl = LegacyEngine(
+                arch, model_cfg, params, cfg, mesh=mesh, tp_axis=tp_axis
+            )
 
+    @property
+    def photonic(self):
+        return self.impl.photonic
+
+    @property
+    def params(self):
+        return self.impl.params
+
+    @params.setter
+    def params(self, value):
+        self.impl.params = value
+
+    @property
+    def stats(self):
+        return self.impl.stats
+
+    def _tp_scope(self):
+        return self.impl._tp_scope()
+
+    def run(self, requests: List[Request], max_steps: int = 10_000) -> List[Request]:
+        return self.impl.run(requests, max_steps)
+
+
+class LegacyEngine:
+    """The original fixed-slot continuous-batching loop.
+
+    Keeps ``batch_size`` decode slots backed by one dense ``(batch,
+    max_seq)`` KV cache.  Free slots fill by prefilling the prompt (one
+    prefill per admission, scattered into the batch cache at the slot
+    index), then all active slots advance together through ``decode`` steps.
+    Known limitations the paged scheduler exists to fix: worst-case cache
+    memory per slot, head-of-line blocking on long prompts, batchless cache
+    leaves (e.g. the scalar ``pos``) staying live across admissions, and a
+    shared sampling stream across slots.
+    """
+
+    def __init__(
+        self,
+        arch,
+        model_cfg,
+        params,
+        cfg: ServeConfig,
+        *,
+        mesh=None,
+        tp_axis: str = "model",
+        clock: Callable[[], float] = time.monotonic,
+    ):
         self.arch = arch
         self.model_cfg = model_cfg
         # Tensor-parallel photonic serving: with a mesh whose `tp_axis` is
@@ -76,31 +155,10 @@ class Engine:
             if mesh is not None and tp_axis in mesh.shape
             else 1
         )
-        # Weight-stationary serving (DESIGN.md §9): when a photonic engine
-        # is configured, quantize + pack every routed weight ONCE here —
-        # prefill and decode steps then stream activations against the
-        # packed int8 banks and never touch (or re-quantize) float weights.
-        self.photonic = engine_from_model_config(model_cfg)
-        if self.photonic is not None:
-            pack_engine = self.photonic
-            if getattr(model_cfg, "mla_absorb", False):
-                # Absorbed MLA decode consumes wuk/wuv as raw floats in its
-                # einsums (never through the quantizing dense path); packing
-                # them would change decode numerics vs the per-call path and
-                # add a per-step weight-sized dequant.  Keep them float.
-                pol = dataclasses.replace(
-                    pack_engine.policy,
-                    exclude=pack_engine.policy.exclude + ("wuk", "wuv"),
-                )
-                pack_engine = dataclasses.replace(pack_engine, policy=pol)
-            params = prepack_params(
-                params,
-                arch.param_defs(model_cfg),
-                pack_engine,
-                mesh=mesh if self._tp_size > 1 else None,
-                axis=tp_axis,
-            )
-        self.params = params
+        self._clock = clock
+        self.photonic, self.params = prepack_serving_params(
+            arch, model_cfg, params, mesh=mesh, tp_axis=tp_axis
+        )
         self.cfg = cfg
         self._decode = jax.jit(lambda p, t, c: arch.decode(p, t, c, model_cfg))
         self.slots: List[Optional[Request]] = [None] * cfg.batch_size
@@ -161,9 +219,11 @@ class Engine:
         tok = jnp.argmax(logits[:, -1, : self.model_cfg.vocab_size], axis=-1)
         self.tokens = self.tokens.at[slot, 0].set(tok[slot].astype(jnp.int32))
         req.output.append(int(tok[slot]))
+        if req.t_first is None:
+            req.t_first = self._clock()
         self.slots[slot] = req
 
-    # -- one engine iteration --------------------------------------------------
+    # -- one engine iteration ------------------------------------------------
     def step(self, queue: List[Request]):
         # fill free slots
         for slot in range(self.cfg.batch_size):
@@ -191,11 +251,15 @@ class Engine:
                 or (req.eos_id is not None and tok == req.eos_id)
             ):
                 req.done = True
+                req.t_done = self._clock()
                 self.stats["completed"] += 1
                 self.slots[slot] = None
 
     def run(self, requests: List[Request], max_steps: int = 10_000) -> List[Request]:
         queue = list(requests)
+        for req in queue:
+            if req.t_submit is None:
+                req.t_submit = self._clock()
         steps = 0
         while (queue or any(s is not None for s in self.slots)) and steps < max_steps:
             self.step(queue)

@@ -1,0 +1,24 @@
+"""Paged-KV continuous-batching serving (DESIGN.md §13).
+
+``kv_cache`` owns the block pool (allocator, tables, gather/scatter);
+``scheduler`` owns request lifecycle: token-budgeted chunked prefill
+interleaved with batched paged decode over the PR-3 weight-stationary
+photonic path, TP-compatible via the PR-4 mesh scope.
+"""
+
+from repro.serving.kv_cache import NULL_BLOCK, BlockAllocator
+from repro.serving.scheduler import (
+    Request,
+    Scheduler,
+    ServingConfig,
+    prepack_serving_params,
+)
+
+__all__ = [
+    "NULL_BLOCK",
+    "BlockAllocator",
+    "Request",
+    "Scheduler",
+    "ServingConfig",
+    "prepack_serving_params",
+]

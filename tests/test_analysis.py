@@ -50,7 +50,9 @@ def rule_ids(findings):
 def test_rule_registry_complete():
     rules = all_rules()
     ids = [r.id for r in rules]
-    assert ids == ["RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006"]
+    assert ids == [
+        "RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006", "RPR007"
+    ]
     for r in rules:
         assert r.summary and r.rationale, f"{r.id} lacks docs"
 
@@ -275,6 +277,42 @@ class TestRPR006:
             "        return go(x)\n"
         )
         assert check_source(src, "src/repro/foo.py") == []
+
+
+# ---------------------------------------------------------------------------
+# RPR007 — paged KV memory only through the kv_cache API
+# ---------------------------------------------------------------------------
+class TestRPR007:
+    def test_pool_subscript_fires_in_models(self):
+        src = "def read(kv_pool, blocks):\n    return kv_pool[blocks]\n"
+        f = check_source(src, "src/repro/models/foo.py")
+        assert rule_ids(f) == ["RPR007"]
+        assert f[0].line == 2
+
+    def test_block_table_indexing_fires_in_runtime(self):
+        src = "def dest(block_table, p, bs):\n    return block_table[p // bs]\n"
+        f = check_source(src, "src/repro/runtime/foo.py")
+        assert rule_ids(f) == ["RPR007"]
+
+    def test_at_update_fires(self):
+        src = (
+            "def write(kv_pool, b, o, rows):\n"
+            "    return kv_pool.at[b, o].set(rows)\n"
+        )
+        assert rule_ids(check_source(src, "src/repro/models/foo.py")) == ["RPR007"]
+
+    def test_api_calls_and_axis_insertion_clean(self):
+        src = (
+            "from repro.serving import kv_cache as kvc\n\n"
+            "def read(kv_pool, block_table, n):\n"
+            "    return kvc.gather_kv(kv_pool, block_table[None], n)\n"
+        )
+        assert check_source(src, "src/repro/models/foo.py") == []
+
+    def test_kv_cache_and_serving_zone_exempt(self):
+        src = "def read(kv_pool, blocks):\n    return kv_pool[blocks]\n"
+        assert check_source(src, "src/repro/serving/kv_cache.py") == []
+        assert check_source(src, "src/repro/serving/foo.py") == []
 
 
 # ---------------------------------------------------------------------------
