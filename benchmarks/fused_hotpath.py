@@ -1,0 +1,202 @@
+"""Fused hot path vs legacy shoulder ops (DESIGN.md §14).
+
+Measures what PR-8's kernel fusion removed from the attention hot block
+— the path `models/attention.py` now routes through one fused-QKV bank:
+per-site activation quantization as separate XLA ops, the digital
+``acc * sx * w_scale`` rescale and bias add after every GEMM, and three
+separate engine dispatches for the Q/K/V projections.
+
+Two arms over the same prepacked int8 weights, both jitted, both ending
+in the identical chunked-attention core (so the measurement isolates
+the projection fusion):
+
+* **legacy** — the pre-fusion composition, op for op:
+  ``quantize_symmetric`` per site, unfused ``engine.int_gemm``, digital
+  rescale, post-GEMM bias add, Q/K/V as three sites.
+* **fused** — the current hot path: one fused-QKV bank
+  (``fuse_qkv_params``), ``engine.matmul`` with the bias riding the
+  in-kernel :class:`~repro.photonic.EpilogueSpec` epilogue.
+
+Timing runs on the ``pallas`` backend — the kernel this PR fused — on
+the decode shape (R=1) and a prefill chunk (R=128).  Beyond wall-clock,
+the win is asserted *structurally*: ``hlo_analysis.dispatch_summary``
+of the compiled modules must show the fused entry op sequence strictly
+shorter — fewer dispatches by construction, not by benchmarking luck.
+A ref-backend run asserts the fused path's bitwise agreement across
+backends on the same operands (the engine contract).
+
+The flash-attention core (``repro.photonic.flash``) is deliberately
+*not* timed here: under CPU interpret mode it is an accelerator-kernel
+prototype, slower than the chunked oracle (see DESIGN.md §14).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dpu import DPUConfig, quantize_symmetric
+from repro.launch import hlo_analysis
+from repro.models.attention import chunked_attention
+from repro.photonic import engine_for, fuse_qkv_params, pack_dense
+
+HEADS = 4
+
+
+def _legacy_site(eng, x2, pack, bias=None):
+    """The pre-fusion per-site composition, op for op (quantize, unfused
+    integer GEMM, digital rescale, post-GEMM bias add)."""
+    xq, sx = quantize_symmetric(x2, eng.dpu.operand_bits)
+    acc = eng.int_gemm(
+        xq, pack.wq, logical_kc=(pack.k, pack.c), tiling=pack.tiling
+    )
+    y = acc.astype(jnp.float32) * sx * pack.w_scale.astype(jnp.float32)[None, :]
+    return y if bias is None else y + bias
+
+
+def _core(q, k, v, d):
+    """The shared attention core: identical in both arms, so the timed
+    difference is the projection hot path alone."""
+    hd = d // HEADS
+    split = lambda a: a.reshape(1, a.shape[0], HEADS, hd)  # noqa: E731
+    y = chunked_attention(
+        split(q), split(k), split(v), causal=True, chunk=64, unroll=1,
+        acc_dtype=jnp.float32,
+    )
+    return y.reshape(-1, d)
+
+
+def _build(d, eng):
+    """Prepacked weights for one attention block, as both the per-site
+    dict (legacy arm) and the fused-QKV dict (fused arm)."""
+    rng = np.random.default_rng(0)
+
+    def w(k, c):
+        return jnp.asarray(rng.normal(size=(k, c), scale=k**-0.5), jnp.float32)
+
+    attn = {
+        name: dict(
+            pack_dense({"w": w(d, d)}, eng),
+            b=jnp.asarray(rng.normal(size=(d,), scale=0.02), jnp.float32),
+        )
+        for name in ("wq", "wk", "wv")
+    }
+    fused_attn = fuse_qkv_params(attn, eng)
+    wo = pack_dense({"w": w(d, d)}, eng)["w"]
+    return attn, fused_attn, wo
+
+
+def _make_steps(eng, attn, fused_attn, wo, d):
+    def legacy(x):
+        q = _legacy_site(eng, x, attn["wq"]["w"], attn["wq"]["b"])
+        k = _legacy_site(eng, x, attn["wk"]["w"], attn["wk"]["b"])
+        v = _legacy_site(eng, x, attn["wv"]["w"], attn["wv"]["b"])
+        return _legacy_site(eng, _core(q, k, v, d), wo)
+
+    def fused(x):
+        y = eng.matmul(
+            x, fused_attn["wqkv"]["w"], site="attn.wqkv",
+            bias=fused_attn["wqkv"]["b"],
+        )
+        q, k, v = jnp.split(y, 3, axis=-1)
+        return eng.matmul(_core(q, k, v, d), wo, site="attn.wo")
+
+    return jax.jit(legacy), jax.jit(fused)
+
+
+def _time(step, x, iters: int) -> float:
+    y = step(x)  # warmup/compile
+    jax.block_until_ready(y)
+    t0 = time.time()
+    for _ in range(iters):
+        y = step(x)
+    jax.block_until_ready(y)
+    return (time.time() - t0) / iters * 1e6  # us/step
+
+
+def main(smoke=False):
+    d = 64  # the smoke-model hot-block width (HEADS heads of d/HEADS)
+    dpu = DPUConfig(organization="SMWA", bits=4, datarate_gs=5.0)
+    eng = engine_for(dpu, "pallas")
+    attn, fused_attn, wo = _build(d, eng)
+    legacy, fused = _make_steps(eng, attn, fused_attn, wo, d)
+
+    rng = np.random.default_rng(1)
+    shapes = {
+        "decode": jnp.asarray(rng.normal(size=(1, d)), jnp.float32),
+        "prefill": jnp.asarray(rng.normal(size=(128, d)), jnp.float32),
+    }
+    iters = {"decode": 3 if smoke else 100, "prefill": 2 if smoke else 20}
+    repeats = 1 if smoke else 3
+
+    derived = {"cells": []}
+    print("fused_hotpath,attention_hot_block,backend=pallas")
+    print("path,variant,us_per_step,dispatch_count,entry_fusions")
+    for path, x in shapes.items():
+        # Structural dispatch summary of both compiled modules.
+        summ = {}
+        for name, step in (("legacy", legacy), ("fused", fused)):
+            hlo = step.lower(x).compile().as_text()
+            summ[name] = hlo_analysis.dispatch_summary(hlo)
+        # Numeric agreement: rescale stage bitwise, bias to last-ulp
+        # (FMA-contraction regimes differ — see the epilogue module doc).
+        np.testing.assert_allclose(
+            np.asarray(legacy(x)), np.asarray(fused(x)), rtol=1e-5, atol=1e-5
+        )
+        us = {}
+        for name, step in (("legacy", legacy), ("fused", fused)):
+            us[name] = min(_time(step, x, iters[path]) for _ in range(repeats))
+            print(
+                f"{path},{name},{us[name]:.0f},"
+                f"{summ[name]['dispatch_count']},{summ[name]['entry_fusions']}"
+            )
+            derived["cells"].append(f"{path}:{name}")
+        speedup = us["legacy"] / us["fused"]
+        shrink = (
+            summ["legacy"]["dispatch_count"] / summ["fused"]["dispatch_count"]
+        )
+        print(f"# {path}: speedup={speedup:.2f}x dispatch_shrink={shrink:.2f}x")
+        assert (
+            summ["fused"]["dispatch_count"] < summ["legacy"]["dispatch_count"]
+        ), (
+            f"{path}: fused entry op sequence not shorter: "
+            f"{summ['fused']['dispatch_count']} vs "
+            f"{summ['legacy']['dispatch_count']}"
+        )
+        derived[path] = {
+            "legacy_us": round(us["legacy"], 1),
+            "fused_us": round(us["fused"], 1),
+            "speedup": round(speedup, 3),
+            "legacy_dispatch_count": summ["legacy"]["dispatch_count"],
+            "fused_dispatch_count": summ["fused"]["dispatch_count"],
+        }
+
+    # Cross-backend bitwise check of the fused path on the decode operand:
+    # the ref oracle must agree with the pallas kernel exactly.
+    eng_r = engine_for(dpu, "ref")
+    attn_r, fused_attn_r, wo_r = _build(d, eng_r)
+    _, fused_r = _make_steps(eng_r, attn_r, fused_attn_r, wo_r, d)
+    x = shapes["decode"]
+    same = bool(jnp.array_equal(fused(x), fused_r(x)))
+    derived["ref_bitwise_equal"] = same
+    assert same, "fused pallas path diverged from the ref oracle"
+
+    # Grid coverage: CI's smoke step asserts this exact cell set survived.
+    derived["grid_complete"] = sorted(derived["cells"]) == sorted(
+        f"{p}:{v}" for p in ("decode", "prefill") for v in ("legacy", "fused")
+    )
+    assert derived["grid_complete"], derived["cells"]
+
+    if not smoke:
+        best = max(derived["decode"]["speedup"], derived["prefill"]["speedup"])
+        assert best >= 1.2, (
+            f"fused hot path under 1.2x on both shapes "
+            f"(decode {derived['decode']['speedup']}x, "
+            f"prefill {derived['prefill']['speedup']}x)"
+        )
+    return derived
+
+
+if __name__ == "__main__":
+    main()

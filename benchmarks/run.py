@@ -26,9 +26,17 @@ def main(argv=None) -> None:
     )
     args = parser.parse_args(argv)
 
+    # One tuned launch profile for every bench (allocator detection, log
+    # hygiene, persistent JAX compilation cache) — recorded in the JSON so
+    # committed numbers name the environment that produced them.
+    from repro.launch import profile
+
+    launch_profile = profile.apply()
+
     from benchmarks import (
         fig5_scalability,
         fig7_system,
+        fused_hotpath,
         noise_accuracy,
         org_accuracy,
         org_design_space,
@@ -46,6 +54,7 @@ def main(argv=None) -> None:
         ("org_accuracy", org_accuracy.main),
         ("org_design_space", org_design_space.main),
         ("prepack_decode", prepack_decode.main),
+        ("fused_hotpath", fused_hotpath.main),
         ("serve_latency", serve_latency.main),
         ("tp_scaling", tp_scaling.main),
     ]
@@ -58,7 +67,7 @@ def main(argv=None) -> None:
         pass
 
     failures = []
-    report = {"smoke": args.smoke, "benches": {}}
+    report = {"smoke": args.smoke, "launch_profile": launch_profile, "benches": {}}
     for name, fn in benches:
         print(f"\n===== {name} =====")
         t0 = time.time()

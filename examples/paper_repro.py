@@ -17,6 +17,9 @@ def gmean(x):
 
 
 def main():
+    from repro.launch import profile
+
+    profile.apply()  # tuned launch env + persistent compilation cache
     print("=" * 72)
     print("Table V — achievable DPU size N (B=4): ours vs paper")
     print("=" * 72)

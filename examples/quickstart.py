@@ -19,6 +19,9 @@ from repro.noise import build_channel_model
 
 
 def main():
+    from repro.launch import profile
+
+    profile.apply()  # tuned launch env + persistent compilation cache
     print("=== 1. scalability: achievable DPE size N (=M) ===")
     for org in ("ASMW", "MASW", "SMWA"):
         ns = [sc.calibrated_max_n(org, 4, dr) for dr in (1, 5, 10)]

@@ -53,6 +53,9 @@ def run(photonic: bool, params, arch, cfg, prompts):
 
 
 def main():
+    from repro.launch import profile
+
+    profile.apply()  # tuned launch env + persistent compilation cache
     arch = registry.get("qwen2-0.5b")
     cfg = dataclasses.replace(arch.smoke_config, remat=False)
     params = init_tree(arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)

@@ -22,6 +22,9 @@ from repro.runtime.train_loop import TrainConfig, train
 
 
 def main():
+    from repro.launch import profile
+
+    profile.apply()  # tuned launch env + persistent compilation cache
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--arch", default="qwen2-0.5b")

@@ -8,6 +8,7 @@ module here, import it below, document the ID in DESIGN.md §12.
 from repro.analysis.rules import (  # noqa: F401
     compat,
     engine,
+    epilogue,
     orgs,
     quant,
     randomness,

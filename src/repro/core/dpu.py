@@ -191,6 +191,51 @@ class DPUConfig:
 # ---------------------------------------------------------------------------
 # Quantization
 # ---------------------------------------------------------------------------
+def quant_scale(
+    x: jax.Array,
+    bits: int,
+    axis: Optional[int] = None,
+    *,
+    amax: Optional[jax.Array] = None,
+) -> jax.Array:
+    """The symmetric quantization scale alone (f32), no rounding.
+
+    Exactly the scale half of :func:`quantize_symmetric` — the fused
+    Pallas hot path computes it outside the kernel (XLA fuses the abs-max
+    reduction into the producer) and ships it into the kernel as an SMEM
+    scalar for the in-kernel rounding prologue.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    if amax is None:
+        amax = jnp.max(jnp.abs(x)) if axis is None else jnp.max(
+            jnp.abs(x), axis=axis, keepdims=True
+        )
+    # Explicit reciprocal multiply: XLA's algebraic simplifier rewrites
+    # divide-by-constant to exactly this inside compiled contexts (jit /
+    # scan bodies), so spelling it out keeps the scale BITWISE identical
+    # between eager calls and compiled ones — the invariant the prepacked
+    # weight path (repro.photonic.packing) relies on.
+    scale = jnp.maximum(amax, 1e-12) * (1.0 / qmax)
+    return scale.astype(jnp.float32)
+
+
+def quantize_with_scale(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    """Round/clip ``x`` against a precomputed symmetric ``scale``.
+
+    The rounding half of :func:`quantize_symmetric` (``scale`` is traced,
+    so the division is the blessed reciprocal-multiply idiom's second
+    half); for f32 inputs, composing it with :func:`quant_scale` is the
+    bitwise-identical op sequence of the one-shot call — which is why the
+    fused hot path only fuses f32 activations (the one-shot call divides
+    by the *raw-dtype* scale, so lower-precision inputs would round
+    differently against the f32 SMEM scalar).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    dtype = jnp.int8 if bits <= 8 else jnp.int32
+    return q.astype(dtype)
+
+
 def quantize_symmetric(
     x: jax.Array,
     bits: int,
@@ -212,11 +257,9 @@ def quantize_symmetric(
         amax = jnp.max(jnp.abs(x)) if axis is None else jnp.max(
             jnp.abs(x), axis=axis, keepdims=True
         )
-    # Explicit reciprocal multiply: XLA's algebraic simplifier rewrites
-    # divide-by-constant to exactly this inside compiled contexts (jit /
-    # scan bodies), so spelling it out keeps the scale BITWISE identical
-    # between eager calls and compiled ones — the invariant the prepacked
-    # weight path (repro.photonic.packing) relies on.
+    # Same reciprocal-multiply scale as quant_scale (see the comment
+    # there); kept inline so the historical raw-dtype division below is
+    # byte-for-byte unchanged for non-f32 inputs.
     scale = jnp.maximum(amax, 1e-12) * (1.0 / qmax)
     q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
     dtype = jnp.int8 if bits <= 8 else jnp.int32

@@ -25,6 +25,17 @@ tile stays resident in VMEM and accumulates across K-tiles (standard Pallas
 matmul accumulation).  ``TK`` must be a multiple of ``n_chunk``; MXU-aligned
 tiles (multiples of 128) are used when ADC/analog fidelity is off (chunking
 is then numerically irrelevant), and exact-N chunks when it is on.
+
+Two entry points share the datapath:
+
+* :func:`photonic_gemm_pallas` — the integer core: int8 in, int32 out.
+* :func:`photonic_gemm_fused_pallas` — the fused hot path (DESIGN.md §14):
+  optional in-kernel activation-quantization prologue (f32 tile + SMEM
+  scale -> int, :func:`repro.kernels.photonic_gemm.epilogue.quantize_tile`)
+  and the fused epilogue (int32 VMEM scratch accumulator -> ``sx *
+  w_scale`` rescale -> optional bias -> optional activation) applied at
+  the last K step, so neither the int32 accumulator nor the quantized
+  activation ever round-trips through HBM.
 """
 
 from __future__ import annotations
@@ -38,6 +49,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.kernels.photonic_gemm.epilogue import (
+    EpilogueSpec,
+    apply_epilogue,
+    quantize_tile,
+)
 from repro.noise.stages import fold_seed, gaussian_from_counter, neighbor_sum
 
 
@@ -50,8 +66,11 @@ def _f32_dot(a: jax.Array, b: jax.Array) -> jax.Array:
     )
 
 
-def _kernel(
-    *refs,
+def _accumulate(
+    x: jax.Array,  # (TR, TK) int32
+    w: jax.Array,  # (TK, TC) int32
+    tile_seed: Optional[jax.Array],
+    *,
     slice_bits: int,
     num_slices: int,
     n_chunk: int,
@@ -61,24 +80,19 @@ def _kernel(
     intermod_eps: float,
     crossweight_eps: float,
     valid_chunks: Optional[int],
-):
+) -> jax.Array:
+    """One K-tile's int32 contribution through the DPU datapath.
+
+    The single definition of the bit-sliced / psum-chunked / analog-stage
+    accumulation, shared by the integer and fused kernels so the two can
+    never drift.
+    """
     analog = (
         noise_sigma > 0.0
         or filter_alpha > 0.0
         or intermod_eps > 0.0
         or crossweight_eps > 0.0
     )
-    if analog:
-        seed_ref, x_ref, w_ref, out_ref = refs
-    else:
-        x_ref, w_ref, out_ref = refs
-
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
-    x = x_ref[...].astype(jnp.int32)  # (TR, TK)
-    w = w_ref[...].astype(jnp.int32)  # (TK, TC)
     tr, tk = x.shape
     _, tc = w.shape
     chunks = tk // n_chunk
@@ -86,16 +100,6 @@ def _kernel(
     sgn_x, mag_x = jnp.sign(x), jnp.abs(x)
     sgn_w, mag_w = jnp.sign(w), jnp.abs(w)
     mask = (1 << slice_bits) - 1
-
-    if analog:
-        # Per-tile noise stream: seed x grid position (bitwise deterministic
-        # for fixed seed and tiling; independent across tiles).
-        tile_seed = fold_seed(
-            seed_ref[0].astype(jnp.uint32),
-            pl.program_id(0),
-            pl.program_id(1),
-            pl.program_id(2),
-        )
 
     acc = jnp.zeros((tr, tc), jnp.int32)
     for si in range(num_slices):
@@ -154,7 +158,144 @@ def _kernel(
                     if lim is not None:
                         psum = jnp.clip(psum, -lim, lim)
                     acc = acc + (psum << shift)
-    out_ref[...] += acc
+    return acc
+
+
+def _kernel(
+    *refs,
+    slice_bits: int,
+    num_slices: int,
+    n_chunk: int,
+    adc_bits: Optional[int],
+    noise_sigma: float,
+    filter_alpha: float,
+    intermod_eps: float,
+    crossweight_eps: float,
+    valid_chunks: Optional[int],
+):
+    analog = (
+        noise_sigma > 0.0
+        or filter_alpha > 0.0
+        or intermod_eps > 0.0
+        or crossweight_eps > 0.0
+    )
+    if analog:
+        seed_ref, x_ref, w_ref, out_ref = refs
+    else:
+        x_ref, w_ref, out_ref = refs
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tile_seed = None
+    if analog:
+        # Per-tile noise stream: seed x grid position (bitwise deterministic
+        # for fixed seed and tiling; independent across tiles).
+        tile_seed = fold_seed(
+            seed_ref[0].astype(jnp.uint32),
+            pl.program_id(0),
+            pl.program_id(1),
+            pl.program_id(2),
+        )
+
+    out_ref[...] += _accumulate(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        tile_seed,
+        slice_bits=slice_bits,
+        num_slices=num_slices,
+        n_chunk=n_chunk,
+        adc_bits=adc_bits,
+        noise_sigma=noise_sigma,
+        filter_alpha=filter_alpha,
+        intermod_eps=intermod_eps,
+        crossweight_eps=crossweight_eps,
+        valid_chunks=valid_chunks,
+    )
+
+
+def _fused_kernel(
+    *refs,
+    operand_bits: int,
+    fuse_quant: bool,
+    has_bias: bool,
+    activation: Optional[str],
+    out_dtype,
+    slice_bits: int,
+    num_slices: int,
+    n_chunk: int,
+    adc_bits: Optional[int],
+    noise_sigma: float,
+    filter_alpha: float,
+    intermod_eps: float,
+    crossweight_eps: float,
+    valid_chunks: Optional[int],
+):
+    analog = (
+        noise_sigma > 0.0
+        or filter_alpha > 0.0
+        or intermod_eps > 0.0
+        or crossweight_eps > 0.0
+    )
+    refs = list(refs)
+    seed_ref = refs.pop(0) if analog else None
+    xs_ref = refs.pop(0)  # SMEM (1,) f32 activation scale (always present)
+    x_ref, w_ref, wscale_ref = refs[0], refs[1], refs[2]
+    bias_ref = refs[3] if has_bias else None
+    out_ref = refs[4] if has_bias else refs[3]
+    acc_ref = refs[-1]  # VMEM (TR, TC) int32 scratch accumulator
+
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if fuse_quant:
+        # In-kernel prologue: the rounding half of quantize_symmetric
+        # against the SMEM scale (elementwise, so per-tile == whole-array;
+        # zero padding quantizes to zero).
+        qmax = float(2 ** (operand_bits - 1) - 1)
+        x = quantize_tile(x_ref[...], xs_ref[0], qmax)
+    else:
+        x = x_ref[...].astype(jnp.int32)
+
+    tile_seed = None
+    if analog:
+        tile_seed = fold_seed(
+            seed_ref[0].astype(jnp.uint32),
+            pl.program_id(0),
+            pl.program_id(1),
+            pl.program_id(2),
+        )
+
+    acc_ref[...] += _accumulate(
+        x,
+        w_ref[...].astype(jnp.int32),
+        tile_seed,
+        slice_bits=slice_bits,
+        num_slices=num_slices,
+        n_chunk=n_chunk,
+        adc_bits=adc_bits,
+        noise_sigma=noise_sigma,
+        filter_alpha=filter_alpha,
+        intermod_eps=intermod_eps,
+        crossweight_eps=crossweight_eps,
+        valid_chunks=valid_chunks,
+    )
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _epilogue():
+        spec = EpilogueSpec(bias=has_bias, activation=activation)
+        y = apply_epilogue(
+            acc_ref[...],
+            xs_ref[0],
+            wscale_ref[...],  # (1, TC), broadcasts over rows
+            bias_ref[...] if has_bias else None,
+            spec,
+        )
+        out_ref[...] = y.astype(out_dtype)
 
 
 @functools.partial(
@@ -240,6 +381,133 @@ def photonic_gemm_pallas(
         in_specs=in_specs,
         out_specs=pl.BlockSpec((tile_r, tile_c), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
+        compiler_params=compat.pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(*args)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "operand_bits",
+        "activation",
+        "out_dtype",
+        "slice_bits",
+        "num_slices",
+        "n_chunk",
+        "adc_bits",
+        "noise_sigma",
+        "filter_alpha",
+        "intermod_eps",
+        "crossweight_eps",
+        "valid_chunks",
+        "tile_r",
+        "tile_c",
+        "tile_k",
+        "interpret",
+    ),
+)
+def photonic_gemm_fused_pallas(
+    x: jax.Array,  # (R, K) f32 activations, or pre-quantized int8
+    wq: jax.Array,  # (K, C) int8, C % tile_c == 0
+    x_scale: jax.Array,  # () or (1,) f32 — activation quantization scale
+    w_scale: jax.Array,  # (C,) f32 per-column dequant scale
+    bias: Optional[jax.Array] = None,  # (C,) f32
+    seed: Optional[jax.Array] = None,  # int32 scalar (1,), required if noisy
+    *,
+    operand_bits: int = 8,
+    activation: Optional[str] = None,
+    out_dtype=jnp.float32,
+    slice_bits: int = 4,
+    num_slices: int = 2,
+    n_chunk: int = 128,
+    adc_bits: Optional[int] = None,
+    noise_sigma: float = 0.0,
+    filter_alpha: float = 0.0,
+    intermod_eps: float = 0.0,
+    crossweight_eps: float = 0.0,
+    valid_chunks: Optional[int] = None,
+    tile_r: int = 128,
+    tile_c: int = 128,
+    tile_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """The fused hot path: [quantize] -> integer GEMM -> epilogue, one kernel.
+
+    When ``x`` is floating point it is quantized in-kernel against the
+    SMEM-resident ``x_scale`` (the prologue); pre-quantized int operands
+    skip the prologue (the noisy channel pre-quantizes digitally because
+    its seed derivation hashes the integer operand).  The int32
+    accumulator lives in a VMEM scratch tile across K steps; at the last
+    K step the epilogue (rescale / bias / activation) writes the f32
+    output — the int32 intermediate never reaches HBM.
+    """
+    r, k = x.shape
+    _, c = wq.shape
+    assert r % tile_r == 0 and c % tile_c == 0 and k % tile_k == 0, (
+        x.shape,
+        wq.shape,
+        (tile_r, tile_c, tile_k),
+    )
+    assert tile_k % n_chunk == 0, (tile_k, n_chunk)
+    analog = (
+        noise_sigma > 0.0
+        or filter_alpha > 0.0
+        or intermod_eps > 0.0
+        or crossweight_eps > 0.0
+    )
+    if noise_sigma > 0.0 and seed is None:
+        raise ValueError("noise_sigma > 0 requires a seed")
+    fuse_quant = jnp.issubdtype(x.dtype, jnp.floating)
+    has_bias = bias is not None
+
+    grid = (r // tile_r, c // tile_c, k // tile_k)
+    kernel = functools.partial(
+        _fused_kernel,
+        operand_bits=operand_bits,
+        fuse_quant=fuse_quant,
+        has_bias=has_bias,
+        activation=activation,
+        out_dtype=out_dtype,
+        slice_bits=slice_bits,
+        num_slices=num_slices,
+        n_chunk=n_chunk,
+        adc_bits=adc_bits,
+        noise_sigma=noise_sigma,
+        filter_alpha=filter_alpha,
+        intermod_eps=intermod_eps,
+        crossweight_eps=crossweight_eps,
+        valid_chunks=valid_chunks,
+    )
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),  # x_scale
+        pl.BlockSpec((tile_r, tile_k), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((tile_k, tile_c), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((1, tile_c), lambda i, j, kk: (0, j)),  # w_scale
+    ]
+    args = [
+        jnp.asarray(x_scale, jnp.float32).reshape(1),
+        x,
+        wq,
+        w_scale.astype(jnp.float32).reshape(1, c),
+    ]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, tile_c), lambda i, j, kk: (0, j)))
+        args.append(bias.astype(jnp.float32).reshape(1, c))
+    if analog:
+        if seed is None:
+            seed = jnp.zeros((1,), jnp.int32)
+        in_specs.insert(0, pl.BlockSpec(memory_space=pltpu.SMEM))
+        args.insert(0, jnp.asarray(seed, jnp.int32).reshape(1))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_r, tile_c), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tile_r, tile_c), jnp.int32)],
         compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),

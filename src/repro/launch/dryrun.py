@@ -1,6 +1,12 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
+from repro.launch import profile as _profile  # noqa: E402
+
+# Tuned launch profile (log hygiene, persistent compilation cache; the
+# device-count flag above is already set, so the merge leaves it alone).
+_profile.apply()
+
 """Multi-pod dry-run (deliverable e).
 
 For every (architecture x input-shape x mesh) cell: build the step function
@@ -346,7 +352,10 @@ def sweep(save_hlo: bool, timeout_s: int = 3600, force: bool = False):
         t0 = time.time()
         print(f"[sweep {i+1}/{len(todo)}] {arch} x {shp} x {mesh} ...", flush=True)
         try:
-            r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout_s)
+            r = subprocess.run(
+                cmd, capture_output=True, text=True, timeout=timeout_s,
+                env=_profile.child_env(),
+            )
             if r.returncode != 0:
                 _cell_path(arch, shp, mesh).write_text(
                     json.dumps(
@@ -398,7 +407,10 @@ def annotate_sweep(timeout_s: int = 3600):
             "--annotate-cell",
         ]
         try:
-            r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout_s)
+            r = subprocess.run(
+                cmd, capture_output=True, text=True, timeout=timeout_s,
+                env=_profile.child_env(),
+            )
             print(
                 "  ok" if r.returncode == 0 else f"  FAILED: {(r.stderr or '')[-300:]}",
                 flush=True,

@@ -229,6 +229,65 @@ def matmul_traffic_bytes(hlo: str) -> float:
     return total
 
 
+_ENTRY_RE = re.compile(r"^ENTRY\s+%?([\w.\-]+)\s*\(")
+
+# Definitions that are bookkeeping, not work: they never become a thunk /
+# kernel launch of their own in the compiled module.
+_BOOKKEEPING_OPS = frozenset(
+    {"parameter", "constant", "tuple", "get-tuple-element", "bitcast"}
+)
+
+
+def entry_computation(hlo: str) -> Optional[str]:
+    """Name of the ENTRY computation of an HLO module dump."""
+    for line in hlo.splitlines():
+        m = _ENTRY_RE.match(line)
+        if m:
+            return m.group(1)
+    return None
+
+
+def dispatch_summary(hlo: str) -> Dict[str, object]:
+    """Structural dispatch-count summary of a compiled module.
+
+    ``dispatch_count`` is the number of non-bookkeeping op definitions in
+    the ENTRY computation — the module's top-level op sequence, a proxy
+    for per-call dispatch/launch overhead (parameters, constants, tuple
+    plumbing and bitcasts excluded: they emit no work).  ``entry_fusions``
+    counts fusion regions among them (post-fusion, fewer regions ==
+    more work riding in each launch).  ``total_ops_loop_adjusted``
+    additionally walks every sub-computation times its ``while``-loop
+    trip count, the op-count analogue of :func:`collective_summary`.
+
+    This is what the fused-hot-path benchmark asserts on: fusing the
+    quant prologue + rescale/bias/activation epilogue into the GEMM
+    kernel must *structurally* shrink the entry op sequence, not just
+    happen to run faster on one machine.
+    """
+    comps = parse_computations(hlo)
+    mult = computation_multipliers(hlo)
+    entry = entry_computation(hlo)
+    by_kind: Dict[str, int] = defaultdict(int)
+    for line in comps.get(entry, []):
+        dm = _DEF_RE.match(line)
+        if dm and dm.group(3) not in _BOOKKEEPING_OPS:
+            by_kind[dm.group(3)] += 1
+    total = 0.0
+    for comp, lines in comps.items():
+        m_c = mult.get(comp, 1.0)
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if dm and dm.group(3) not in _BOOKKEEPING_OPS:
+                total += m_c
+    return {
+        "entry_computation": entry,
+        "dispatch_count": int(sum(by_kind.values())),
+        "entry_fusions": int(by_kind.get("fusion", 0)),
+        "entry_ops_by_kind": dict(sorted(by_kind.items())),
+        "total_ops_loop_adjusted": total,
+    }
+
+
 def collective_summary(hlo: str) -> Dict[str, float]:
     """Total wire bytes per device, by kind and overall (loop-adjusted)."""
     ops = collect_collectives(hlo)

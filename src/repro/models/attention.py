@@ -139,6 +139,48 @@ def _split_heads(x: jax.Array, n: int) -> jax.Array:
     return x.reshape(b, t, n, -1)
 
 
+def _qkv_proj(params, x, cfg: ModelConfig, *, layer=None):
+    """Q/K/V projections, head-split, RoPE not yet applied.
+
+    When the param dict carries a fused ``wqkv`` entry
+    (:func:`repro.photonic.fuse_qkv_params`) the three projections run as
+    ONE engine dispatch — one activation quantization, one fused-epilogue
+    GEMM — and the output columns are split back here.  Per-column
+    quantization and the K-chunked accumulation are column-independent,
+    so under a deterministic channel this is bitwise the three separate
+    calls (the noisy channel draws a different, equally valid stream for
+    the "attn.wqkv" site).
+    """
+    h, kv, hd = cfg.n_q_heads, cfg.num_kv_heads, cfg.hd
+    if "wqkv" in params:
+        y = dense(params["wqkv"], x, cfg, site="attn.wqkv", layer=layer)
+        yq, yk, yv = jnp.split(y, (h * hd, (h + kv) * hd), axis=-1)
+    else:
+        yq = dense(params["wq"], x, cfg, site="attn.wq", layer=layer)
+        yk = dense(params["wk"], x, cfg, site="attn.wk", layer=layer)
+        yv = dense(params["wv"], x, cfg, site="attn.wv", layer=layer)
+    return _split_heads(yq, h), _split_heads(yk, kv), _split_heads(yv, kv)
+
+
+def _attend(q, k, v, cfg: ModelConfig, *, causal: bool, q_offset: int = 0):
+    """The prefill/train attention core behind ``cfg.attn_impl``.
+
+    "chunked" is the jnp online-softmax scan; "flash" dispatches the
+    Pallas flash-attention kernel via the ``repro.photonic`` surface
+    (RPR003) — same math, different block partition, so the two agree to
+    float tolerance rather than bitwise.
+    """
+    if cfg.attn_impl == "flash":
+        from repro.photonic.flash import flash_attention
+
+        return flash_attention(q, k, v, causal=causal, q_offset=q_offset)
+    return chunked_attention(
+        q, k, v, causal=causal, q_offset=q_offset,
+        chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
+        acc_dtype=jnp.float32 if cfg.attn_f32 else jnp.bfloat16,
+    )
+
+
 def gqa_attention(
     params: Dict[str, Any],
     x: jax.Array,  # (B, T, D)
@@ -149,20 +191,13 @@ def gqa_attention(
     q_offset: int = 0,
     layer: Optional[jax.Array] = None,
 ) -> jax.Array:
-    h, kv = cfg.n_q_heads, cfg.num_kv_heads
-    q = _split_heads(dense(params["wq"], x, cfg, site="attn.wq", layer=layer), h)
-    k = _split_heads(dense(params["wk"], x, cfg, site="attn.wk", layer=layer), kv)
-    v = _split_heads(dense(params["wv"], x, cfg, site="attn.wv", layer=layer), kv)
+    q, k, v = _qkv_proj(params, x, cfg, layer=layer)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     q = cm.with_logical(q, ("batch", None, "heads", None))
     k = cm.with_logical(k, ("batch", None, "kv_heads", None))
     v = cm.with_logical(v, ("batch", None, "kv_heads", None))
-    out = chunked_attention(
-        q, k, v, causal=causal, q_offset=q_offset,
-        chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
-        acc_dtype=jnp.float32 if cfg.attn_f32 else jnp.bfloat16,
-    )
+    out = _attend(q, k, v, cfg, causal=causal, q_offset=q_offset)
     out = out.reshape(*x.shape[:2], -1)
     return dense(params["wo"], out, cfg, site="attn.wo", layer=layer)
 
@@ -171,17 +206,11 @@ def gqa_prefill(
     params, x, cfg: ModelConfig, *, positions, max_seq: int, layer=None
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Self-attention over the prompt + returns a padded KV cache."""
-    h, kv = cfg.n_q_heads, cfg.num_kv_heads
     b, t, _ = x.shape
-    q = _split_heads(dense(params["wq"], x, cfg, site="attn.wq", layer=layer), h)
-    k = _split_heads(dense(params["wk"], x, cfg, site="attn.wk", layer=layer), kv)
-    v = _split_heads(dense(params["wv"], x, cfg, site="attn.wv", layer=layer), kv)
+    q, k, v = _qkv_proj(params, x, cfg, layer=layer)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    out = chunked_attention(
-        q, k, v, causal=True, chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
-        acc_dtype=jnp.float32 if cfg.attn_f32 else jnp.bfloat16,
-    )
+    out = _attend(q, k, v, cfg, causal=True)
     out = dense(params["wo"], out.reshape(b, t, -1), cfg, site="attn.wo", layer=layer)
     pad4 = ((0, 0), (0, max_seq - t), (0, 0), (0, 0))
     pad3 = ((0, 0), (0, max_seq - t), (0, 0))
@@ -223,9 +252,7 @@ def gqa_decode(
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     h, kv = cfg.n_q_heads, cfg.num_kv_heads
     b = x.shape[0]
-    q = _split_heads(dense(params["wq"], x, cfg, site="attn.wq", layer=layer), h)
-    k1 = _split_heads(dense(params["wk"], x, cfg, site="attn.wk", layer=layer), kv)
-    v1 = _split_heads(dense(params["wv"], x, cfg, site="attn.wv", layer=layer), kv)
+    q, k1, v1 = _qkv_proj(params, x, cfg, layer=layer)
     posv = pos[None] if pos.ndim == 0 else pos
     q = apply_rope(q, posv, cfg.rope_theta)
     k1 = apply_rope(k1, posv, cfg.rope_theta)
@@ -337,11 +364,8 @@ def gqa_prefill_chunk(
     """
     from repro.serving import kv_cache as kvc
 
-    h, kv = cfg.n_q_heads, cfg.num_kv_heads
     tc = x.shape[1]
-    q = _split_heads(dense(params["wq"], x, cfg, site="attn.wq", layer=layer), h)
-    k = _split_heads(dense(params["wk"], x, cfg, site="attn.wk", layer=layer), kv)
-    v = _split_heads(dense(params["wv"], x, cfg, site="attn.wv", layer=layer), kv)
+    q, k, v = _qkv_proj(params, x, cfg, layer=layer)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
 
@@ -388,9 +412,7 @@ def gqa_decode_paged(
 
     h, kv = cfg.n_q_heads, cfg.num_kv_heads
     b = x.shape[0]
-    q = _split_heads(dense(params["wq"], x, cfg, site="attn.wq", layer=layer), h)
-    k1 = _split_heads(dense(params["wk"], x, cfg, site="attn.wk", layer=layer), kv)
-    v1 = _split_heads(dense(params["wv"], x, cfg, site="attn.wv", layer=layer), kv)
+    q, k1, v1 = _qkv_proj(params, x, cfg, layer=layer)
     q = apply_rope(q, pos[:, None], cfg.rope_theta)
     k1 = apply_rope(k1, pos[:, None], cfg.rope_theta)
 

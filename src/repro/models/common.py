@@ -79,6 +79,7 @@ class ModelConfig:
     remat_policy: str = "full"   # full | dots (save dot outputs) — §Perf knob
     attn_f32: bool = True        # f32 flash-attn accumulators (False: bf16 MXU)
     attn_chunk: int = 512        # KV-block size of chunked attention
+    attn_impl: str = "chunked"   # chunked | flash (Pallas kernel, §14 hot path)
     unroll_scans: bool = False   # unroll inner chunk scans (cost-analysis mode)
     logical_rules: Any = None    # per-arch sharding-rule overrides (dict)
     kv_cache_int8: bool = False  # int8 KV cache w/ per-token-head scales
@@ -113,6 +114,11 @@ class ModelConfig:
             raise ValueError(
                 f"photonic_backend={self.photonic_backend!r} is not one of "
                 f"{backends}"
+            )
+        impls = ("chunked", "flash")
+        if self.attn_impl not in impls:
+            raise ValueError(
+                f"attn_impl={self.attn_impl!r} is not one of {impls}"
             )
 
     @property
@@ -299,6 +305,7 @@ def dense(
     site: Optional[str] = None,
     layer: Optional[jax.Array] = None,
     prng_key: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
 ) -> jax.Array:
     """Linear layer; routes through the photonic engine when enabled.
 
@@ -310,6 +317,13 @@ def dense(
     with neither a key nor ``DPUConfig.noise_seed`` raises the documented
     ``ValueError``).
 
+    The bias (when the def has one) and an optional ``activation``
+    ("gelu"/"silu") are *not* applied here as separate ops: they ride the
+    engine's fused epilogue (``EpilogueSpec``, DESIGN.md §14) so routed
+    GEMMs never materialize the unrescaled or pre-activation intermediate
+    (RPR008 enforces this).  Digital fallbacks keep the historical op
+    order bit-for-bit.
+
     Under an active tensor-parallel scope
     (``repro.photonic.sharded.tensor_parallel`` / ``manual_tp``) routed
     GEMMs K-shard over the mesh axis: shard-local channel at ``N_local``,
@@ -319,27 +333,61 @@ def dense(
     from repro.photonic import sharded as tp
 
     w = params["w"]
+    bias = params.get("b")
     eng = engine_from_model_config(cfg)
     y = tp.maybe_tp_matmul(
-        eng, params, x, cfg, site=site, fold=layer, prng_key=prng_key
+        eng,
+        params,
+        x,
+        cfg,
+        site=site,
+        fold=layer,
+        prng_key=prng_key,
+        bias=bias,
+        activation=activation,
     )
     if y is None:
         y = _single_device_matmul(
-            eng, params, w, x, cfg, site=site, layer=layer, prng_key=prng_key
+            eng,
+            params,
+            w,
+            x,
+            cfg,
+            site=site,
+            layer=layer,
+            prng_key=prng_key,
+            bias=bias,
+            activation=activation,
         )
-    if "b" in params:
-        y = y + params["b"].astype(y.dtype)
     return y
 
 
-def _single_device_matmul(eng, params, w, x, cfg, *, site, layer, prng_key):
+def _digital_epilogue(y, bias, activation):
+    """Bias/activation for fully digital matmuls — the historical op order
+    (bias added in the output dtype, activation from the engine's shared
+    table) so non-photonic paths are bitwise-unchanged by fusion."""
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    if activation is not None:
+        from repro.photonic import ACTIVATIONS
+
+        y = ACTIVATIONS[activation](y)
+    return y
+
+
+def _single_device_matmul(
+    eng, params, w, x, cfg, *, site, layer, prng_key, bias, activation
+):
     """The non-sharded product of :func:`dense` (every weight layout)."""
     from repro.photonic.packing import PackedDense
 
     if isinstance(w, PackedDense):
         if eng is None:
-            return x @ w.dequant().astype(x.dtype)
-        return eng.matmul(x, w, site=site, fold=layer, prng_key=prng_key)
+            return _digital_epilogue(x @ w.dequant().astype(x.dtype), bias, activation)
+        return eng.matmul(
+            x, w, site=site, fold=layer, prng_key=prng_key,
+            bias=bias, activation=activation,
+        )
     if "w_scale" in params:
         # int8-stored weights through the DPU integer datapath (legacy
         # layout; the engine wraps them as an unpadded pack on the fly).
@@ -351,10 +399,16 @@ def _single_device_matmul(eng, params, w, x, cfg, *, site, layer, prng_key):
         packed = PackedDense(
             w, params["w_scale"], w.shape[-2], w.shape[-1], tiling=None
         )
-        return eng.matmul(x, packed, site=site, fold=layer, prng_key=prng_key)
+        return eng.matmul(
+            x, packed, site=site, fold=layer, prng_key=prng_key,
+            bias=bias, activation=activation,
+        )
     if eng is not None and cfg.photonic_scope == "weights":
-        return eng.matmul_float(x, w, site=site, fold=layer, prng_key=prng_key)
-    return x @ w.astype(x.dtype)
+        return eng.matmul_float(
+            x, w, site=site, fold=layer, prng_key=prng_key,
+            bias=bias, activation=activation,
+        )
+    return _digital_epilogue(x @ w.astype(x.dtype), bias, activation)
 
 
 def quantize_params(params: Any, defs: Any) -> Any:

@@ -34,12 +34,19 @@ def mlp_def(cfg: ModelConfig, d_ff: int | None = None) -> Dict[str, Any]:
 
 
 def mlp(params, x: jax.Array, cfg: ModelConfig, layer=None, site="ffn") -> jax.Array:
-    h = dense(params["wi"], x, cfg, site=f"{site}.wi", layer=layer)
     if cfg.ffn_act == "swiglu":
+        # swiglu splits the GEMM output before gating, so the activation
+        # cannot ride the fused epilogue (it is not per-column).
+        h = dense(params["wi"], x, cfg, site=f"{site}.wi", layer=layer)
         u, g = jnp.split(h, 2, axis=-1)
         h = u * jax.nn.silu(g)
     else:
-        h = jax.nn.gelu(h)
+        # gelu is elementwise on the GEMM output — fused into the engine
+        # epilogue (DESIGN.md §14); digital fallback applies the same op.
+        h = dense(
+            params["wi"], x, cfg, site=f"{site}.wi", layer=layer,
+            activation="gelu",
+        )
     return dense(params["wo"], h, cfg, site=f"{site}.wo", layer=layer)
 
 

@@ -15,8 +15,21 @@ per tile, inputs stream at the symbol rate); prepacking is the software
 image of that: quantize/pack the weight once, stream activations through.
 """
 
+# The epilogue vocabulary is re-exported here (its home is a leaf module
+# under repro.kernels) so models/ can speak EpilogueSpec without importing
+# kernel internals (RPR003).
+from repro.kernels.photonic_gemm.epilogue import (
+    ACTIVATIONS,
+    EpilogueArgs,
+    EpilogueSpec,
+)
 from repro.photonic.engine import PhotonicEngine, SitePolicy, engine_for
-from repro.photonic.packing import PackedDense, pack_dense, prepack_params
+from repro.photonic.packing import (
+    PackedDense,
+    fuse_qkv_params,
+    pack_dense,
+    prepack_params,
+)
 from repro.photonic.sharded import (
     manual_tp,
     psum_int_gemm,
@@ -25,10 +38,14 @@ from repro.photonic.sharded import (
 )
 
 __all__ = [
+    "ACTIVATIONS",
+    "EpilogueArgs",
+    "EpilogueSpec",
     "PhotonicEngine",
     "SitePolicy",
     "PackedDense",
     "engine_for",
+    "fuse_qkv_params",
     "manual_tp",
     "pack_dense",
     "prepack_params",

@@ -43,8 +43,22 @@ import jax.numpy as jnp
 # Moved to the Level-2 contract passes in PR-6; re-exported for existing
 # call sites (tests, benchmarks) that import it from the engine.
 from repro.analysis.contracts import count_weight_round_ops  # noqa: F401
-from repro.core.dpu import DPUConfig, quantize_symmetric
-from repro.kernels.photonic_gemm.kernel import photonic_gemm_pallas
+from repro.core.dpu import (
+    DPUConfig,
+    quant_scale,
+    quantize_symmetric,
+    quantize_with_scale,
+)
+from repro.kernels.photonic_gemm.epilogue import (
+    ACTIVATIONS,
+    EpilogueArgs,
+    EpilogueSpec,
+    apply_epilogue,
+)
+from repro.kernels.photonic_gemm.kernel import (
+    photonic_gemm_fused_pallas,
+    photonic_gemm_pallas,
+)
 from repro.kernels.photonic_gemm.ref import exact_int_gemm, photonic_gemm_ref
 from repro.noise.stages import (
     data_tweak,
@@ -63,6 +77,32 @@ SHARD_STREAM_TAG = 0x5348
 
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+# The epilogue as its own compilation unit.  The Pallas kernel's fused
+# epilogue always runs compiled (the kernel entry is jitted), so the
+# ref/exact backends apply theirs through this jitted twin — same op
+# sequence, same compilation regime — which keeps the backends
+# bitwise-aligned in every calling context even for the FMA-contractable
+# bias/activation stages (see the epilogue module docstring).  Under an
+# outer ``jit`` this inlines, exactly as the interpret-mode kernel body
+# does; the rescale-only default is contraction-free either way.
+_jit_apply_epilogue = functools.partial(jax.jit, static_argnames="spec")(
+    apply_epilogue
+)
+
+
+def _digital_reference(x, wf, bias, spec: EpilogueSpec) -> jax.Array:
+    """Non-routed fallback: the exact digital op order the models used
+    before epilogue fusion existed — matmul in ``x.dtype``, bias added in
+    the *output* dtype, activation from the shared table — so excluded
+    sites stay bitwise-stable against the pre-fusion path."""
+    y = x @ wf
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    if spec.activation is not None:
+        y = ACTIVATIONS[spec.activation](y)
+    return y
 
 
 def _on_cpu() -> bool:
@@ -228,6 +268,7 @@ class PhotonicEngine:
         interpret: Optional[bool] = None,
         tile_r: int = 128,
         tile_c: int = 128,
+        epilogue: Optional[EpilogueArgs] = None,
     ) -> jax.Array:
         """Integer GEMM through the DPU datapath; int32 (R, C).
 
@@ -236,16 +277,39 @@ class PhotonicEngine:
         the weight is taken at face value and padded per call.  ``shard``
         is the mesh-axis index of a K-sharded call (see
         :meth:`stream_seed`); it only perturbs the noise stream.
+
+        With ``epilogue`` this is the *fused hot path* (DESIGN.md §14):
+        ``xq`` may be a float activation — quantized against
+        ``epilogue.x_scale`` in-kernel on the Pallas backend, digitally
+        (same op sequence) elsewhere — and the int32 accumulator is
+        rescaled / biased / activated before it ever materializes,
+        returning f32 ``(R, C)``.  Without it the historical integer
+        contract is unchanged: int in, int32 out.
         """
         k, c = logical_kc if logical_kc is not None else wq.shape[-2:]
-        if self.backend == "exact":
-            return exact_int_gemm(xq, wq[:k, :c])
-
         cfg = self.dpu
         channel = cfg.effective_channel()
         analog = channel is not None and channel.analog
         adc_bits = channel.adc_bits if channel is not None else cfg.adc_bits
         noisy = analog and channel.detector_sigma_lsb > 0.0
+
+        if jnp.issubdtype(xq.dtype, jnp.floating):
+            if epilogue is None:
+                raise TypeError(
+                    "int_gemm got float activations without an EpilogueArgs; "
+                    "quantize explicitly or pass epilogue= (fused hot path)"
+                )
+            if noisy or self.backend != "pallas":
+                # The noise-stream seed hashes the *integer* activation
+                # image, and only the Pallas kernel has an in-kernel
+                # prologue — everywhere else quantize digitally (the same
+                # op sequence as the in-kernel ``quantize_tile``).
+                xq = quantize_with_scale(xq, epilogue.x_scale, cfg.operand_bits)
+
+        if self.backend == "exact":
+            acc = exact_int_gemm(xq, wq[:k, :c])
+            return acc if epilogue is None else _finish(acc, epilogue)
+
         seed = (
             self.stream_seed(site, fold, prng_key, xq, wq, shard=shard)
             if noisy
@@ -253,7 +317,7 @@ class PhotonicEngine:
         )
 
         if self.backend == "ref":
-            return photonic_gemm_ref(
+            acc = photonic_gemm_ref(
                 xq,
                 wq[:k, :c],
                 slice_bits=cfg.bits,
@@ -263,6 +327,7 @@ class PhotonicEngine:
                 channel=channel,
                 seed=seed,
             )
+            return acc if epilogue is None else _finish(acc, epilogue)
 
         assert self.backend == "pallas", self.backend
         if interpret is None:
@@ -281,10 +346,8 @@ class PhotonicEngine:
         if wq.shape != (kp, cp):
             wq = jnp.pad(wq[:k, :c], ((0, kp - k), (0, cp - c)))
         ch = channel
-        out = photonic_gemm_pallas(
-            xp,
-            wq,
-            None if seed is None else seed.astype(jnp.int32).reshape(1),
+        seed_arr = None if seed is None else seed.astype(jnp.int32).reshape(1)
+        stages = dict(
             slice_bits=cfg.bits,
             num_slices=cfg.num_slices,
             n_chunk=n_chunk,
@@ -299,6 +362,23 @@ class PhotonicEngine:
             tile_k=tile_k,
             interpret=interpret,
         )
+        if epilogue is None:
+            out = photonic_gemm_pallas(xp, wq, seed_arr, **stages)
+            return out[:r, :c]
+        ws = epilogue.w_scale.astype(jnp.float32).reshape(-1)
+        bias = epilogue.bias
+        out = photonic_gemm_fused_pallas(
+            xp,
+            wq,
+            epilogue.x_scale,
+            jnp.pad(ws, (0, cp - c)),
+            None if bias is None else jnp.pad(bias.astype(jnp.float32), (0, cp - c)),
+            seed_arr,
+            operand_bits=cfg.operand_bits,
+            activation=epilogue.spec.activation,
+            out_dtype=jnp.float32,
+            **stages,
+        )
         return out[:r, :c]
 
     # -- float entry points (STE-differentiable) -----------------------------
@@ -310,15 +390,20 @@ class PhotonicEngine:
         site: Optional[str] = None,
         fold=None,
         prng_key: Optional[jax.Array] = None,
+        bias: Optional[jax.Array] = None,
+        activation: Optional[str] = None,
     ) -> jax.Array:
         """Float GEMM, quantizing *both* operands per call (QAT/train path).
 
-        Non-routed sites fall back to the exact digital matmul.
+        ``bias``/``activation`` ride the fused epilogue (DESIGN.md §14)
+        instead of materializing a post-GEMM add in the caller.
+        Non-routed sites fall back to the exact digital op order.
         """
+        spec = EpilogueSpec(bias=bias is not None, activation=activation)
         if not self.routes(site):
-            return x @ w.astype(x.dtype)
+            return _digital_reference(x, w.astype(x.dtype), bias, spec)
         fold = None if fold is None else jnp.asarray(fold, jnp.int32)
-        return _float_matmul((self, site), x, w, fold, prng_key)
+        return _float_matmul((self, site, spec), x, w, bias, fold, prng_key)
 
     def matmul(
         self,
@@ -328,17 +413,22 @@ class PhotonicEngine:
         site: Optional[str] = None,
         fold=None,
         prng_key: Optional[jax.Array] = None,
+        bias: Optional[jax.Array] = None,
+        activation: Optional[str] = None,
     ) -> jax.Array:
         """Float GEMM against a prepacked weight — the weight-stationary
-        hot path: only the activation is quantized per call.
+        hot path: only the activation is quantized per call, and with a
+        float32 activation the quantization itself is deferred into the
+        Pallas kernel prologue.
 
         Non-routed sites execute the dequantized digital matmul.
         """
+        spec = EpilogueSpec(bias=bias is not None, activation=activation)
         if not self.routes(site):
-            return x @ packed.dequant().astype(x.dtype)
+            return _digital_reference(x, packed.dequant().astype(x.dtype), bias, spec)
         fold = None if fold is None else jnp.asarray(fold, jnp.int32)
-        meta = (self, site, packed.k, packed.c, packed.tiling)
-        return _packed_matmul(meta, x, packed.wq, packed.w_scale, fold, prng_key)
+        meta = (self, site, packed.k, packed.c, packed.tiling, spec)
+        return _packed_matmul(meta, x, packed.wq, packed.w_scale, bias, fold, prng_key)
 
 
 @functools.lru_cache(maxsize=None)
@@ -354,73 +444,144 @@ def engine_for(
 
 
 # ---------------------------------------------------------------------------
+# Shared float-entry forward (the quant / dequant shoulder logic lives once)
+# ---------------------------------------------------------------------------
+def _finish(acc: jax.Array, e: EpilogueArgs) -> jax.Array:
+    """Apply the fused epilogue to a digital int32 accumulator, through the
+    jitted twin so the compilation regime matches the Pallas kernel's."""
+    return _jit_apply_epilogue(
+        acc, e.x_scale, e.w_scale.astype(jnp.float32), e.bias, e.spec
+    )
+
+
+def _stream_gemm(
+    eng: "PhotonicEngine",
+    site,
+    spec: EpilogueSpec,
+    x,
+    wq,
+    w_scale,
+    bias,
+    fold,
+    prng_key,
+    *,
+    logical_kc=None,
+    tiling=None,
+):
+    """One forward through the fused hot path, shared by the per-call and
+    prepacked float entry points (previously duplicated in both impls).
+
+    Quantizes the streaming activation — *deferred* for f32 streams, where
+    only the scale is computed here (bitwise `quantize_symmetric`'s) and
+    the rounding happens in the Pallas prologue or digitally inside
+    ``int_gemm`` — then runs the integer datapath with the epilogue fused.
+    """
+    lead = x.shape[:-1]
+    xr = x.reshape(-1, x.shape[-1])
+    if xr.dtype == jnp.float32:
+        xs, sx = xr, quant_scale(xr, eng.dpu.operand_bits)
+    else:
+        # Non-f32 floats divide by the raw-dtype scale inside
+        # quantize_symmetric (see its docstring) — not expressible as a
+        # deferred f32-scale prologue, so quantize digitally up front.
+        xs, sx = quantize_symmetric(xr, eng.dpu.operand_bits)
+    cols = logical_kc[1] if logical_kc is not None else wq.shape[1]
+    y = eng.int_gemm(
+        xs,
+        wq,
+        site=site,
+        fold=fold,
+        prng_key=prng_key,
+        logical_kc=logical_kc,
+        tiling=tiling,
+        epilogue=EpilogueArgs(spec, sx, w_scale, bias),
+    )
+    return y.reshape(*lead, cols).astype(x.dtype)
+
+
+def _epilogue_bwd(spec: EpilogueSpec, g2, x2, wf, bias):
+    """Backward of the epilogue under the engine's STE convention: straight
+    through the quantized GEMM (pre-activation recomputed from the float
+    operands), exact through bias and activation.  Returns the gradient at
+    the GEMM output and the bias cotangent (``None`` when bias is)."""
+    if spec.activation is not None:
+        pre = x2 @ wf
+        if bias is not None:
+            pre = pre + bias.astype(jnp.float32)
+        _, act_vjp = jax.vjp(ACTIVATIONS[spec.activation], pre)
+        (g2,) = act_vjp(g2)
+    db = None if bias is None else g2.sum(axis=0).astype(bias.dtype)
+    return g2, db
+
+
+# ---------------------------------------------------------------------------
 # STE custom-VJP wrappers (module level: stable identity across jit traces)
 # ---------------------------------------------------------------------------
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _float_matmul(meta, x, w, fold, prng_key):
-    return _float_fwd_impl(meta, x, w, fold, prng_key)
+def _float_matmul(meta, x, w, bias, fold, prng_key):
+    return _float_fwd_impl(meta, x, w, bias, fold, prng_key)
 
 
-def _float_fwd_impl(meta, x, w, fold, prng_key):
-    eng, site = meta
-    lead = x.shape[:-1]
-    xr = x.reshape(-1, x.shape[-1])
-    xq, sx = quantize_symmetric(xr, eng.dpu.operand_bits)
+def _float_fwd_impl(meta, x, w, bias, fold, prng_key):
+    eng, site, spec = meta
     wq, sw = quantize_symmetric(w, eng.dpu.operand_bits, axis=0)
-    out = eng.int_gemm(xq, wq, site=site, fold=fold, prng_key=prng_key)
-    y = out.astype(jnp.float32) * sx * sw
-    return y.reshape(*lead, w.shape[1]).astype(x.dtype)
+    return _stream_gemm(eng, site, spec, x, wq, sw, bias, fold, prng_key)
 
 
-def _float_fwd(meta, x, w, fold, prng_key):
-    return _float_fwd_impl(meta, x, w, fold, prng_key), (x, w, fold, prng_key)
+def _float_fwd(meta, x, w, bias, fold, prng_key):
+    y = _float_fwd_impl(meta, x, w, bias, fold, prng_key)
+    return y, (x, w, bias, fold, prng_key)
 
 
 def _float_bwd(meta, res, g):
-    x, w, fold, prng_key = res
+    _, _, spec = meta
+    x, w, bias, fold, prng_key = res
     g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    dx = (g2 @ w.astype(jnp.float32).T).reshape(x.shape).astype(x.dtype)
+    wf = w.astype(jnp.float32)
+    g2, db = _epilogue_bwd(spec, g2, x2, wf, bias)
+    dx = (g2 @ wf.T).reshape(x.shape).astype(x.dtype)
     dw = (x2.T @ g2).astype(w.dtype)
-    return dx, dw, key_zero_cotangent(fold), key_zero_cotangent(prng_key)
+    return dx, dw, db, key_zero_cotangent(fold), key_zero_cotangent(prng_key)
 
 
 _float_matmul.defvjp(_float_fwd, _float_bwd)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _packed_matmul(meta, x, wq, w_scale, fold, prng_key):
-    return _packed_fwd_impl(meta, x, wq, w_scale, fold, prng_key)
+def _packed_matmul(meta, x, wq, w_scale, bias, fold, prng_key):
+    return _packed_fwd_impl(meta, x, wq, w_scale, bias, fold, prng_key)
 
 
-def _packed_fwd_impl(meta, x, wq, w_scale, fold, prng_key):
-    eng, site, k, c, tiling = meta
-    lead = x.shape[:-1]
-    xr = x.reshape(-1, x.shape[-1])
-    xq, sx = quantize_symmetric(xr, eng.dpu.operand_bits)
-    out = eng.int_gemm(
-        xq,
+def _packed_fwd_impl(meta, x, wq, w_scale, bias, fold, prng_key):
+    eng, site, k, c, tiling, spec = meta
+    return _stream_gemm(
+        eng,
+        site,
+        spec,
+        x,
         wq,
-        site=site,
-        fold=fold,
-        prng_key=prng_key,
+        w_scale,
+        bias,
+        fold,
+        prng_key,
         logical_kc=(k, c),
         tiling=tiling,
     )
-    y = out.astype(jnp.float32) * sx * w_scale.astype(jnp.float32)[None, :]
-    return y.reshape(*lead, c).astype(x.dtype)
 
 
-def _packed_fwd(meta, x, wq, w_scale, fold, prng_key):
-    y = _packed_fwd_impl(meta, x, wq, w_scale, fold, prng_key)
-    return y, (x, wq, w_scale, fold, prng_key)
+def _packed_fwd(meta, x, wq, w_scale, bias, fold, prng_key):
+    y = _packed_fwd_impl(meta, x, wq, w_scale, bias, fold, prng_key)
+    return y, (x, wq, w_scale, bias, fold, prng_key)
 
 
 def _packed_bwd(meta, res, g):
-    _, site, k, c, _ = meta
-    x, wq, w_scale, fold, prng_key = res
+    _, site, k, c, _, spec = meta
+    x, wq, w_scale, bias, fold, prng_key = res
     wf = wq[:k, :c].astype(jnp.float32) * w_scale.astype(jnp.float32)[None, :]
     g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    g2, db = _epilogue_bwd(spec, g2, x2, wf, bias)
     dx = (g2 @ wf.T).reshape(x.shape).astype(x.dtype)
     # Prepacked weights are frozen serving state: int8 slices get the
     # mandatory float0 cotangent, the scale a plain zero.
@@ -428,6 +589,7 @@ def _packed_bwd(meta, res, g):
         dx,
         key_zero_cotangent(wq),
         jnp.zeros_like(w_scale),
+        db,
         key_zero_cotangent(fold),
         key_zero_cotangent(prng_key),
     )

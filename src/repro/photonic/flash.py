@@ -1,0 +1,25 @@
+"""Engine-side attention-core surface for the fused photonic hot path.
+
+``models/attention.py`` may not import ``repro.kernels`` (RPR003 — kernel
+backends are reachable only through the ``repro.photonic`` surface), so
+the flash-attention kernel is exported to models from here.  This is the
+second half of the fused QKV prototype (DESIGN.md §14): the QKV
+projections run as one fused-epilogue photonic GEMM
+(:func:`repro.photonic.packing.fuse_qkv_params`), and its float output
+feeds the Pallas flash kernel directly — Q/K/V tiles stream from the
+projection into the attention kernel's VMEM working set instead of
+round-tripping through an HBM-resident scores matrix, and the whole
+attention core is one dispatch instead of a per-KV-chunk scan.
+
+Selected per model with ``ModelConfig.attn_impl = "flash"``; the default
+("chunked") keeps the jnp online-softmax scan.  The two cores are the
+same math with different block partitions, so they agree to float
+tolerance, not bitwise — decode (R=1) and the paged paths stay on their
+explicit-softmax/chunked cores either way.
+"""
+
+from __future__ import annotations
+
+from repro.kernels.flash_attention.ops import flash_attention
+
+__all__ = ["flash_attention"]

@@ -185,6 +185,85 @@ def pack_dense(
     return out
 
 
+def fuse_qkv_params(attn: dict, engine: PhotonicEngine) -> dict:
+    """Fuse a self-attention dict's ``wq``/``wk``/``wv`` into one ``wqkv``.
+
+    The Q/K/V projections share the streaming activation; as three sites
+    they cost three engine dispatches and three activation quantizations
+    per token.  Fused into one ``(K, Cq+Ck+Cv)`` bank they cost one —
+    ``models/attention.py::_qkv_proj`` splits the output columns back.
+
+    Bitwise contract: per-column quantization, the K-chunked accumulation
+    (:func:`~repro.photonic.engine.pallas_tiling` chunks by ``(cfg, K)``
+    only) and the fused epilogue are all column-independent, so under a
+    deterministic channel the fused call equals the three separate calls
+    bit-for-bit, column by column.  Only the *noisy* channel diverges:
+    the noise stream is seeded per site ("attn.wqkv" vs three names), a
+    different but equally valid draw.
+
+    Accepts prepacked (:class:`PackedDense`, unsharded), int8-stored
+    (``w`` + per-column ``w_scale``) or float parts — mixed layouts or
+    K-sharded packs are an error.  Biases must be all present or all
+    absent (``qkv_bias``).  Leading stack dims pass through, so stacked
+    layer trees fuse in one call.
+    """
+    names = ("wq", "wk", "wv")
+    missing = [n for n in names if n not in attn]
+    if missing:
+        raise KeyError(f"fuse_qkv_params: attention dict lacks {missing}")
+    parts = [attn[n] for n in names]
+    packed = [isinstance(p["w"], PackedDense) for p in parts]
+    scaled = ["w_scale" in p for p in parts]
+    if (any(packed) and not all(packed)) or (any(scaled) and not all(scaled)):
+        raise ValueError("fuse_qkv_params: mixed Q/K/V weight layouts")
+    with_bias = ["b" in p for p in parts]
+    if any(with_bias) and not all(with_bias):
+        raise ValueError("fuse_qkv_params: bias on only some of Q/K/V")
+
+    if all(packed):
+        packs = [p["w"] for p in parts]
+        if any(pk.shards != 1 for pk in packs):
+            raise ValueError("fuse_qkv_params: K-sharded packs not supported")
+        k = packs[0].k
+        if any(pk.k != k for pk in packs):
+            raise ValueError(
+                f"fuse_qkv_params: mismatched K {[pk.k for pk in packs]}"
+            )
+        # Slice each bank to its logical columns (drops per-site tile
+        # padding), concatenate, re-pad once for the fused width.
+        wq = jnp.concatenate(
+            [pk.wq[..., : pk.k, : pk.c] for pk in packs], axis=-1
+        )
+        scale = jnp.concatenate([pk.w_scale for pk in packs], axis=-1)
+        c = sum(pk.c for pk in packs)
+        tiling = None
+        if engine.backend == "pallas":
+            n_chunk, tile_k, tile_c = pallas_tiling(engine.dpu, k, c)
+            kp = -(-k // tile_k) * tile_k
+            cp = -(-c // tile_c) * tile_c
+            pad = [(0, 0)] * (wq.ndim - 2) + [(0, kp - k), (0, cp - c)]
+            wq = jnp.pad(wq, pad)
+            tiling = (n_chunk, tile_k, tile_c)
+        fused = {"w": PackedDense(wq, scale, k, c, tiling, 1)}
+    elif all(scaled):
+        # int8-stored layout: columns (and their dequant scales) just
+        # concatenate; the engine wraps the result on the fly as before.
+        fused = {
+            "w": jnp.concatenate([p["w"] for p in parts], axis=-1),
+            "w_scale": jnp.concatenate([p["w_scale"] for p in parts], axis=-1),
+        }
+    else:
+        # Float weights: per-column quantization at call time is column-
+        # independent, so concatenation alone preserves the contract.
+        fused = {"w": jnp.concatenate([p["w"] for p in parts], axis=-1)}
+
+    if all(with_bias):
+        fused["b"] = jnp.concatenate([p["b"] for p in parts], axis=-1)
+    out = {name: val for name, val in attn.items() if name not in names}
+    out["wqkv"] = fused
+    return out
+
+
 def prepack_params(
     params: Any,
     defs: Any,

@@ -57,8 +57,9 @@ import jax.numpy as jnp
 from repro import compat
 from repro.compat import PartitionSpec as P
 from repro.core.dpu import quantize_symmetric
+from repro.kernels.photonic_gemm.epilogue import EpilogueSpec, apply_epilogue
 from repro.noise.stages import key_zero_cotangent
-from repro.photonic.engine import PhotonicEngine
+from repro.photonic.engine import PhotonicEngine, _epilogue_bwd
 from repro.photonic.packing import PackedDense
 
 
@@ -204,15 +205,22 @@ def _row_sharding(mesh, axis, rows):
     return dp_axes
 
 
-def _run_shard_map(mesh, axis, body, args, specs, fold, prng_key, out_spec=P()):
-    """Invoke ``body(*main, fold=..., prng_key=...)`` under shard_map.
+def _run_shard_map(
+    mesh, axis, body, args, specs, fold, prng_key, out_spec=P(), bias=None
+):
+    """Invoke ``body(*main, bias=..., fold=..., prng_key=...)`` under
+    shard_map.
 
-    ``fold``/``prng_key`` may be ``None`` (absent), a traced scalar, or a
-    typed PRNG key; they ride as replicated trailing operands so the body
-    signature stays static per (has_fold, has_key) combination.
+    ``bias``/``fold``/``prng_key`` may be ``None`` (absent), an array, or
+    (for ``prng_key``) a typed PRNG key; they ride as replicated trailing
+    operands so the body signature stays static per presence combination.
     """
     args = list(args)
     specs = list(specs)
+    has_bias = bias is not None
+    if has_bias:
+        args.append(bias)
+        specs.append(P())
     has_fold = fold is not None
     if has_fold:
         args.append(jnp.asarray(fold, jnp.int32))
@@ -226,17 +234,19 @@ def _run_shard_map(mesh, axis, body, args, specs, fold, prng_key, out_spec=P()):
         else:
             args.append(prng_key)
         specs.append(P())
-    n_main = len(args) - int(has_fold) - int(has_key)
+    n_main = len(args) - int(has_bias) - int(has_fold) - int(has_key)
 
     def wrapped(*vals):
         main = vals[:n_main]
         i = n_main
+        b = vals[i] if has_bias else None
+        i += int(has_bias)
         f = vals[i] if has_fold else None
         i += int(has_fold)
         key = vals[i] if has_key else None
         if key is not None and typed_key:
             key = jax.random.wrap_key_data(key)
-        return body(*main, fold=f, prng_key=key)
+        return body(*main, bias=b, fold=f, prng_key=key)
 
     fn = compat.shard_map(
         wrapped,
@@ -251,8 +261,8 @@ def _run_shard_map(mesh, axis, body, args, specs, fold, prng_key, out_spec=P()):
 # ---------------------------------------------------------------------------
 # STE float wrappers (module level: stable identity across jit traces)
 # ---------------------------------------------------------------------------
-def _float_fwd_impl(meta, x, w, fold, prng_key):
-    eng, site, axis, mesh = meta
+def _float_fwd_impl(meta, x, w, bias, fold, prng_key):
+    eng, site, axis, mesh, spec = meta
     bits = eng.dpu.operand_bits
     lead = x.shape[:-1]
     k, c = w.shape
@@ -272,12 +282,12 @@ def _float_fwd_impl(meta, x, w, fold, prng_key):
         out = psum_int_gemm(
             eng, xl, wl, axis=axis, site=site, fold=fold, prng_key=prng_key
         )
-        y = out.astype(jnp.float32) * sx * sw
+        y = apply_epilogue(out, sx, sw.astype(jnp.float32), bias, spec)
     else:
         rows = _row_sharding(mesh, axis, xr.shape[0])
         x_axes = (axis,) if rows is None else rows + (axis,)
 
-        def body(xl, wl, *, fold, prng_key):
+        def body(xl, wl, *, bias, fold, prng_key):
             # pmax-reduced global abs-max => shard-local quantization is
             # bitwise identical to the unsharded quantization (max is
             # exact under any reduction order).
@@ -289,7 +299,11 @@ def _float_fwd_impl(meta, x, w, fold, prng_key):
                 eng, xq, wq, axis=axis, site=site, fold=fold,
                 prng_key=prng_key,
             )
-            return out.astype(jnp.float32) * sx * sw
+            # Full fused epilogue inside the collective body: partials meet
+            # in the psum, then the replicated bias/activation tail runs on
+            # the replicated output — the same op sequence as the
+            # single-device epilogue.
+            return apply_epilogue(out, sx, sw.astype(jnp.float32), bias, spec)
 
         y = _run_shard_map(
             mesh,
@@ -300,33 +314,38 @@ def _float_fwd_impl(meta, x, w, fold, prng_key):
             fold,
             prng_key,
             out_spec=P(rows),
+            bias=bias,
         )
     return y.reshape(*lead, c).astype(x.dtype)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _tp_float_matmul(meta, x, w, fold, prng_key):
-    return _float_fwd_impl(meta, x, w, fold, prng_key)
+def _tp_float_matmul(meta, x, w, bias, fold, prng_key):
+    return _float_fwd_impl(meta, x, w, bias, fold, prng_key)
 
 
-def _tp_float_fwd(meta, x, w, fold, prng_key):
-    return _float_fwd_impl(meta, x, w, fold, prng_key), (x, w, fold, prng_key)
+def _tp_float_fwd(meta, x, w, bias, fold, prng_key):
+    y = _float_fwd_impl(meta, x, w, bias, fold, prng_key)
+    return y, (x, w, bias, fold, prng_key)
 
 
 def _tp_float_bwd(meta, res, g):
-    x, w, fold, prng_key = res
+    spec = meta[4]
+    x, w, bias, fold, prng_key = res
     g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    dx = (g2 @ w.astype(jnp.float32).T).reshape(x.shape).astype(x.dtype)
+    wf = w.astype(jnp.float32)
+    g2, db = _epilogue_bwd(spec, g2, x2, wf, bias)
+    dx = (g2 @ wf.T).reshape(x.shape).astype(x.dtype)
     dw = (x2.T @ g2).astype(w.dtype)
-    return dx, dw, key_zero_cotangent(fold), key_zero_cotangent(prng_key)
+    return dx, dw, db, key_zero_cotangent(fold), key_zero_cotangent(prng_key)
 
 
 _tp_float_matmul.defvjp(_tp_float_fwd, _tp_float_bwd)
 
 
-def _packed_fwd_impl(meta, x, wq, w_scale, fold, prng_key):
-    eng, site, axis, mesh, k, c, tiling, shards = meta
+def _packed_fwd_impl(meta, x, wq, w_scale, bias, fold, prng_key):
+    eng, site, axis, mesh, k, c, tiling, shards, spec = meta
     bits = eng.dpu.operand_bits
     lead = x.shape[:-1]
     xr = x.reshape(-1, x.shape[-1])
@@ -349,14 +368,14 @@ def _packed_fwd_impl(meta, x, wq, w_scale, fold, prng_key):
             prng_key=prng_key,
             logical_kc=(k_local, c),
         )
-        y = out.astype(jnp.float32) * sx * w_scale.astype(jnp.float32)[None, :]
+        y = apply_epilogue(out, sx, w_scale.astype(jnp.float32), bias, spec)
     else:
         size = int(mesh.shape[axis])
         k_local = k // size
         rows = _row_sharding(mesh, axis, xr.shape[0])
         x_axes = (axis,) if rows is None else rows + (axis,)
 
-        def body(xl, wl, scale, *, fold, prng_key):
+        def body(xl, wl, scale, *, bias, fold, prng_key):
             ax = jax.lax.pmax(jnp.max(jnp.abs(xl)), x_axes)
             xq, sx = quantize_symmetric(xl, bits, amax=ax)
             out = psum_int_gemm(
@@ -370,7 +389,7 @@ def _packed_fwd_impl(meta, x, wq, w_scale, fold, prng_key):
                 logical_kc=(k_local, c),
                 tiling=tiling,
             )
-            return out.astype(jnp.float32) * sx * scale.astype(jnp.float32)[None, :]
+            return apply_epilogue(out, sx, scale.astype(jnp.float32), bias, spec)
 
         # Activations shard rows over the DP axes and K over the TP axis,
         # int8 banks shard on their fan-in rows (the sharded pack stores
@@ -385,25 +404,28 @@ def _packed_fwd_impl(meta, x, wq, w_scale, fold, prng_key):
             fold,
             prng_key,
             out_spec=P(rows),
+            bias=bias,
         )
     return y.reshape(*lead, c).astype(x.dtype)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _tp_packed_matmul(meta, x, wq, w_scale, fold, prng_key):
-    return _packed_fwd_impl(meta, x, wq, w_scale, fold, prng_key)
+def _tp_packed_matmul(meta, x, wq, w_scale, bias, fold, prng_key):
+    return _packed_fwd_impl(meta, x, wq, w_scale, bias, fold, prng_key)
 
 
-def _tp_packed_fwd(meta, x, wq, w_scale, fold, prng_key):
-    y = _packed_fwd_impl(meta, x, wq, w_scale, fold, prng_key)
-    return y, (x, wq, w_scale, fold, prng_key)
+def _tp_packed_fwd(meta, x, wq, w_scale, bias, fold, prng_key):
+    y = _packed_fwd_impl(meta, x, wq, w_scale, bias, fold, prng_key)
+    return y, (x, wq, w_scale, bias, fold, prng_key)
 
 
 def _tp_packed_bwd(meta, res, g):
-    _, _, _, _, k, c, tiling, shards = meta
-    x, wq, w_scale, fold, prng_key = res
+    _, _, _, _, k, c, tiling, shards, spec = meta
+    x, wq, w_scale, bias, fold, prng_key = res
     wf = PackedDense(wq, w_scale, k, c, tiling, shards).dequant()
     g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    g2, db = _epilogue_bwd(spec, g2, x2, wf, bias)
     dx = (g2 @ wf.T).reshape(x.shape).astype(x.dtype)
     # Prepacked weights are frozen serving state: int8 banks get the
     # mandatory float0 cotangent, the scale a plain zero.
@@ -411,6 +433,7 @@ def _tp_packed_bwd(meta, res, g):
         dx,
         key_zero_cotangent(wq),
         jnp.zeros_like(w_scale),
+        db,
         key_zero_cotangent(fold),
         key_zero_cotangent(prng_key),
     )
@@ -431,6 +454,8 @@ def maybe_tp_matmul(
     site: Optional[str] = None,
     fold=None,
     prng_key: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
 ) -> Optional[jax.Array]:
     """The tensor-parallel product for ``models.common.dense``.
 
@@ -438,6 +463,8 @@ def maybe_tp_matmul(
     degree 1, a site the policy keeps digital, a contraction K the axis
     does not divide, or a pack layout the active mode cannot shard —
     and the caller falls through to the single-device path.
+    ``bias``/``activation`` ride the fused epilogue inside the collective
+    body (replicated operands, applied after the psum).
     """
     ctx = current_tp()
     if ctx is None or engine is None or not engine.routes(site):
@@ -445,6 +472,7 @@ def maybe_tp_matmul(
     size = ctx.size()
     if size <= 1:
         return None
+    spec = EpilogueSpec(bias=bias is not None, activation=activation)
     fold = None if fold is None else jnp.asarray(fold, jnp.int32)
     w = params["w"]
     if isinstance(w, PackedDense):
@@ -455,8 +483,8 @@ def maybe_tp_matmul(
         k, c = w.shape
         if k % size:
             return None
-        meta = (engine, site, ctx.axis, ctx.mesh)
-        return _tp_float_matmul(meta, x, w, fold, prng_key)
+        meta = (engine, site, ctx.axis, ctx.mesh, spec)
+        return _tp_float_matmul(meta, x, w, bias, fold, prng_key)
     else:
         return None
     if packed.k % size:
@@ -477,5 +505,8 @@ def maybe_tp_matmul(
         packed.c,
         packed.tiling,
         packed.shards,
+        spec,
     )
-    return _tp_packed_matmul(meta, x, packed.wq, packed.w_scale, fold, prng_key)
+    return _tp_packed_matmul(
+        meta, x, packed.wq, packed.w_scale, bias, fold, prng_key
+    )

@@ -51,7 +51,8 @@ def test_rule_registry_complete():
     rules = all_rules()
     ids = [r.id for r in rules]
     assert ids == [
-        "RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006", "RPR007"
+        "RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006", "RPR007",
+        "RPR008",
     ]
     for r in rules:
         assert r.summary and r.rationale, f"{r.id} lacks docs"
@@ -313,6 +314,85 @@ class TestRPR007:
         src = "def read(kv_pool, blocks):\n    return kv_pool[blocks]\n"
         assert check_source(src, "src/repro/serving/kv_cache.py") == []
         assert check_source(src, "src/repro/serving/foo.py") == []
+
+
+# ---------------------------------------------------------------------------
+# RPR008 — engine GEMM outputs take no post-GEMM scale/bias shoulders
+# ---------------------------------------------------------------------------
+class TestRPR008:
+    def test_scale_on_tracked_output_fires(self):
+        src = (
+            "def f(eng, x, pk, sx, ws):\n"
+            "    y = eng.matmul(x, pk, site='attn.wq')\n"
+            "    return y * sx * ws\n"
+        )
+        f = check_source(src, "src/repro/models/foo.py")
+        assert rule_ids(f) == ["RPR008"]
+        assert f[0].line == 3
+
+    def test_bias_add_on_call_result_fires(self):
+        src = (
+            "def f(eng, x, w, b):\n"
+            "    return eng.matmul_float(x, w, site='ffn.wi') + b\n"
+        )
+        f = check_source(src, "src/repro/models/foo.py")
+        assert rule_ids(f) == ["RPR008"]
+        assert f[0].line == 2
+
+    def test_augassign_fires(self):
+        src = (
+            "def f(eng, x, pk, b):\n"
+            "    y = eng.matmul(x, pk, site='s')\n"
+            "    y += b\n"
+            "    return y\n"
+        )
+        f = check_source(src, "src/repro/models/foo.py")
+        assert rule_ids(f) == ["RPR008"]
+        assert f[0].line == 3
+
+    def test_epilogue_kwargs_clean(self):
+        src = (
+            "def f(eng, x, pk, b):\n"
+            "    return eng.matmul(x, pk, site='s', bias=b, "
+            "activation='gelu')\n"
+        )
+        assert check_source(src, "src/repro/models/foo.py") == []
+
+    def test_dense_output_gating_clean(self):
+        # SwiGLU gating and residual adds act on dense() results, which
+        # are epilogue-complete already — the rule must not track them.
+        src = (
+            "def f(params, x, cfg):\n"
+            "    u = dense(params['wi'], x, cfg, site='ffn.wi')\n"
+            "    g = dense(params['wg'], x, cfg, site='ffn.wg')\n"
+            "    return x + u * jax.nn.silu(g)\n"
+        )
+        assert check_source(src, "src/repro/models/foo.py") == []
+
+    def test_reassignment_untracks(self):
+        src = (
+            "def f(eng, x, pk, b):\n"
+            "    y = eng.matmul(x, pk, site='s')\n"
+            "    y = jnp.reshape(y, (-1,))\n"
+            "    return y + b\n"
+        )
+        assert check_source(src, "src/repro/models/foo.py") == []
+
+    def test_digital_matmul_receivers_clean(self):
+        src = (
+            "def f(x, w, b):\n"
+            "    y = jnp.matmul(x, w)\n"
+            "    return y + b\n"
+        )
+        assert check_source(src, "src/repro/models/foo.py") == []
+
+    def test_out_of_models_zone_clean(self):
+        src = (
+            "def f(eng, x, pk, sx):\n"
+            "    return eng.matmul(x, pk, site='s') * sx\n"
+        )
+        assert check_source(src, "src/repro/photonic/foo.py") == []
+        assert check_source(src, "benchmarks/foo.py") == []
 
 
 # ---------------------------------------------------------------------------
