@@ -5,6 +5,8 @@ import time
 
 from repro.core import scalability as sc
 
+from benchmarks.run import register_benchmark
+
 
 def run(csv=True, drs=(1, 5, 10), bits=tuple(range(1, 9))):
     rows = []
@@ -26,6 +28,7 @@ def run(csv=True, drs=(1, 5, 10), bits=tuple(range(1, 9))):
     return rows
 
 
+@register_benchmark("fig5_scalability")
 def main(smoke=False):
     rows = run(drs=(5,), bits=(2, 4, 8)) if smoke else run()
     # validation hooks (also asserted in tests)

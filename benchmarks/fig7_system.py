@@ -14,6 +14,8 @@ import numpy as np
 from repro.core.perfmodel import AcceleratorConfig
 from repro.core.simulator import evaluate_all
 
+from benchmarks.run import register_benchmark
+
 MODELS = ("googlenet", "resnet50", "mobilenet_v2", "shufflenet_v2")
 ORGS = ("ASMW", "MASW", "SMWA")
 DRS = (1, 5, 10)
@@ -63,6 +65,7 @@ def run(models=MODELS, drs=DRS):
     return summary
 
 
+@register_benchmark("fig7_system")
 def main(smoke=False):
     if smoke:
         summary = run(models=("shufflenet_v2", "resnet50"), drs=(1, 10))

@@ -39,7 +39,15 @@ import numpy as np
 from repro.core.dpu import DPUConfig, quantize_symmetric
 from repro.launch import hlo_analysis
 from repro.models.attention import chunked_attention
-from repro.photonic import engine_for, fuse_qkv_params, pack_dense
+from repro.photonic import (
+    Epilogue,
+    EpilogueSpec,
+    engine_for,
+    fuse_qkv_params,
+    pack_dense,
+)
+
+from benchmarks.run import register_benchmark
 
 HEADS = 4
 
@@ -97,7 +105,7 @@ def _make_steps(eng, attn, fused_attn, wo, d):
     def fused(x):
         y = eng.matmul(
             x, fused_attn["wqkv"]["w"], site="attn.wqkv",
-            bias=fused_attn["wqkv"]["b"],
+            epilogue=Epilogue(EpilogueSpec(bias=True), fused_attn["wqkv"]["b"]),
         )
         q, k, v = jnp.split(y, 3, axis=-1)
         return eng.matmul(_core(q, k, v, d), wo, site="attn.wo")
@@ -115,6 +123,7 @@ def _time(step, x, iters: int) -> float:
     return (time.time() - t0) / iters * 1e6  # us/step
 
 
+@register_benchmark("fused_hotpath")
 def main(smoke=False):
     d = 64  # the smoke-model hot-block width (HEADS heads of d/HEADS)
     dpu = DPUConfig(organization="SMWA", bits=4, datarate_gs=5.0)

@@ -16,6 +16,8 @@ import numpy as np
 
 from repro.core.dpu import DPUConfig, noise_sigma_from_snr, photonic_matmul
 
+from benchmarks.run import register_benchmark
+
 
 def make_data(key, n=2048, d=64, classes=10):
     kc, kx = jax.random.split(key)
@@ -78,6 +80,7 @@ def run(smoke=False):
     return derived
 
 
+@register_benchmark("noise_accuracy")
 def main(smoke=False):
     return run(smoke=smoke)
 

@@ -36,6 +36,8 @@ from repro.kernels.photonic_gemm.ref import exact_int_gemm
 from repro.noise import build_channel_model
 from repro.orgs import ORGANIZATIONS
 
+from benchmarks.run import register_benchmark
+
 N_SWEEP = (8, 16, 32, 64)
 N_SWEEP_SMOKE = (16,)
 
@@ -145,6 +147,48 @@ def workload_gemm_sqnr(n_sweep, max_rows=32, max_cols=64, max_k=512):
 # ---------------------------------------------------------------------------
 # 3. LM config: photonic int8 serving under each organization's channel
 # ---------------------------------------------------------------------------
+def _lm_setup(tokens=16, batch=2):
+    """Shared LM fixture: qwen2-0.5b smoke config, float reference logits."""
+    from repro.models import registry
+    from repro.models.common import init_tree
+
+    arch = registry.get("qwen2-0.5b")
+    cfg = dataclasses.replace(arch.smoke_config, remat=False)
+    params = init_tree(arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, tokens)), jnp.int32)
+    ref_logits, _ = arch.prefill(params, {"tokens": toks}, cfg, tokens)
+    return arch, cfg, params, toks, tokens, ref_logits
+
+
+def _lm_fidelity(setup, channel, seed, n, slicing=None):
+    """(rel logit err, top-1 agreement) of photonic int8 serving vs float."""
+    from repro.models.common import quantize_params
+
+    arch, cfg, params, toks, tokens, ref_logits = setup
+    dpu = DPUConfig(
+        organization=channel.organization if channel else "SMWA",
+        bits=4,
+        dpe_size=n,
+        channel=channel,
+        noise_seed=seed,
+    )
+    cfg_q = dataclasses.replace(
+        cfg,
+        photonic=dpu,
+        photonic_backend="ref",
+        photonic_scope="weights_int8",
+        photonic_slicing=slicing,
+    )
+    params_q = quantize_params(params, arch.param_defs(cfg_q))
+    logits, _ = arch.prefill(params_q, {"tokens": toks}, cfg_q, tokens)
+    rel = float(jnp.linalg.norm(logits - ref_logits) / jnp.linalg.norm(ref_logits))
+    top1 = float(
+        (jnp.argmax(logits, -1) == jnp.argmax(ref_logits, -1)).mean()
+    )
+    return rel, top1
+
+
 def lm_logit_fidelity(n, tokens=16, batch=2, seeds=(5, 6, 7)):
     """Relative logit error + top-1 agreement of photonic int8 serving vs
     the float model (qwen2-0.5b smoke config, random init — logit error is
@@ -157,41 +201,58 @@ def lm_logit_fidelity(n, tokens=16, batch=2, seeds=(5, 6, 7)):
     fullscale-referred analog noise swamps them).  The organization
     ordering is carried by the CNN-proxy / SQNR axes; here we check the
     saturation bound and that noise, not quantization, is responsible."""
-    from repro.models import registry
-    from repro.models.common import init_tree, quantize_params
-
-    arch = registry.get("qwen2-0.5b")
-    cfg = dataclasses.replace(arch.smoke_config, remat=False)
-    params = init_tree(arch.param_defs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
-    rng = np.random.default_rng(1)
-    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, tokens)), jnp.int32)
-
-    ref_logits, _ = arch.prefill(params, {"tokens": toks}, cfg, tokens)
-    ref_top1 = jnp.argmax(ref_logits, -1)
-
-    def fidelity(channel, seed):
-        dpu = DPUConfig(
-            organization=channel.organization if channel else "SMWA",
-            bits=4,
-            dpe_size=n,
-            channel=channel,
-            noise_seed=seed,
-        )
-        cfg_q = dataclasses.replace(
-            cfg, photonic=dpu, photonic_backend="ref", photonic_scope="weights_int8"
-        )
-        params_q = quantize_params(params, arch.param_defs(cfg_q))
-        logits, _ = arch.prefill(params_q, {"tokens": toks}, cfg_q, tokens)
-        rel = float(jnp.linalg.norm(logits - ref_logits) / jnp.linalg.norm(ref_logits))
-        top1 = float((jnp.argmax(logits, -1) == ref_top1).mean())
-        return rel, top1
-
-    out = {"ideal": fidelity(None, seeds[0])}
+    setup = _lm_setup(tokens=tokens, batch=batch)
+    out = {"ideal": _lm_fidelity(setup, None, seeds[0], n)}
     for org in ORGANIZATIONS:
         ch = build_channel_model(org, n=n, bits=4, datarate_gs=5.0)
-        rels, top1s = zip(*(fidelity(ch, s) for s in seeds))
+        rels, top1s = zip(*(_lm_fidelity(setup, ch, s, n) for s in seeds))
         out[org] = (float(np.mean(rels)), float(np.mean(top1s)))
     return out
+
+
+PLATFORM_SWEEP = ("SOI", "SIN")
+SLICING_SWEEP = (None, 2)
+
+
+def lm_platform_slicing_grid(
+    n,
+    tokens=16,
+    batch=2,
+    seeds=(5, 6, 7),
+    platforms=PLATFORM_SWEEP,
+    slicings=SLICING_SWEEP,
+):
+    """Platform x slicing x org LM logit fidelity grid (PR-9 tentpole).
+
+    The escape hatches from the ENOB-saturated baseline measured by
+    :func:`lm_logit_fidelity`:
+
+    * **platform** — SiN's ~10x lower propagation loss raises the
+      received per-channel power, shrinking the fullscale-referred
+      detector sigma (and roughly doubling the achievable N, though this
+      grid holds N fixed to isolate the noise effect);
+    * **slicing** — 2-bit plane passes shrink the product full-scale by
+      ``(2^2-1)^2 / (2^4-1)^2 = 0.04``, and the per-plane noise draws
+      recombine with exact digital shifts.
+
+    Keys are ``"{platform}|{plane_bits or 'none'}|{org}"``; values are
+    seed-averaged relative logit errors (lower = higher fidelity).
+    """
+    setup = _lm_setup(tokens=tokens, batch=batch)
+    grid = {}
+    for platform in platforms:
+        for slicing in slicings:
+            for org in ORGANIZATIONS:
+                ch = build_channel_model(
+                    org, n=n, bits=4, datarate_gs=5.0, platform=platform
+                )
+                rels = [
+                    _lm_fidelity(setup, ch, s, n, slicing=slicing)[0]
+                    for s in seeds
+                ]
+                plane = "none" if slicing is None else str(slicing)
+                grid[f"{platform}|{plane}|{org}"] = float(np.mean(rels))
+    return grid
 
 
 # ---------------------------------------------------------------------------
@@ -220,6 +281,14 @@ def run(smoke=False):
     for org, (rel, top1) in sorted(lm.items()):
         print(f"{org},{lm_n},{rel:.4f},{top1:.4f}")
 
+    grid_kwargs = dict(tokens=8, seeds=(5,)) if smoke else {}
+    grid = lm_platform_slicing_grid(lm_n, **grid_kwargs)
+    print("org_accuracy,lm_platform_slicing_rel_logit_err")
+    print("platform,slicing,org,n,rel_logit_err")
+    for key, rel in sorted(grid.items()):
+        platform, plane, org = key.split("|")
+        print(f"{platform},{plane},{org},{lm_n},{rel:.4f}")
+
     print(f"# total_s={time.time() - t0:.1f}")
     return {
         "float_accuracy": acc_float,
@@ -230,9 +299,11 @@ def run(smoke=False):
         "lm_n": lm_n,
         "lm_rel_logit_err": {o: rel for o, (rel, _) in lm.items()},
         "lm_top1": {o: t for o, (_, t) in lm.items()},
+        "lm_platform_slicing": grid,
     }
 
 
+@register_benchmark("org_accuracy")
 def main(smoke=False):
     derived = run(smoke=smoke)
     # Acceptance: SMWA (hitless) degrades no faster than ASMW/MASW at
@@ -252,6 +323,12 @@ def main(smoke=False):
     for org in ("ASMW", "MASW", "SMWA"):
         assert lm[org] > lm["ideal"], lm
     assert lm["SMWA"] <= min(lm["ASMW"], lm["MASW"]) + 0.2, lm
+    # PR-9 tentpole: the SiN + bit-sliced arm must beat the ENOB-saturated
+    # SOI unsliced baseline for every organization — lower-loss platform
+    # and plane-referred noise are real fidelity levers, not no-ops.
+    grid = derived["lm_platform_slicing"]
+    for org in ("ASMW", "MASW", "SMWA"):
+        assert grid[f"SIN|2|{org}"] < grid[f"SOI|none|{org}"], (org, grid)
     return derived
 
 

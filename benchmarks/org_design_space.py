@@ -42,6 +42,8 @@ from repro.core.simulator import simulate
 from repro.noise import build_channel_model
 from repro.orgs import ORGANIZATIONS, valid_orderings
 
+from benchmarks.run import register_benchmark
+
 BITS = 4
 MODEL = "resnet50"
 
@@ -99,6 +101,7 @@ def run(datarates):
     return table
 
 
+@register_benchmark("org_design_space")
 def main(smoke: bool = False) -> dict:
     datarates = (5,) if smoke else (1, 5, 10)
     t0 = time.time()

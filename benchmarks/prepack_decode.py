@@ -26,6 +26,8 @@ from repro.models.common import engine_from_model_config, init_tree
 from repro.photonic.engine import count_weight_round_ops
 from repro.photonic.packing import prepack_params
 
+from benchmarks.run import register_benchmark
+
 
 def _time_steps(step, params, tok, cache, iters: int) -> float:
     logits, cache = step(params, tok, cache)  # warmup/compile
@@ -37,6 +39,7 @@ def _time_steps(step, params, tok, cache, iters: int) -> float:
     return (time.time() - t0) / iters * 1e6  # us/step
 
 
+@register_benchmark("prepack_decode")
 def main(smoke=False):
     arch = registry.get("qwen2-0.5b")
     cfg = dataclasses.replace(

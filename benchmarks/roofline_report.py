@@ -24,6 +24,8 @@ from pathlib import Path
 from repro.core.params import TPU_V5E
 from repro.models import registry
 
+from benchmarks.run import register_benchmark
+
 RESULTS_DIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
 CHIPS = {"single": 256, "multi": 512}
 
@@ -221,6 +223,7 @@ def render(write_experiments: bool = False) -> str:
     return table
 
 
+@register_benchmark("roofline_report")
 def main(smoke=False):
     del smoke  # pure post-processing of cached dry-run JSON
     print("roofline_report,per_cell_terms")

@@ -1,6 +1,13 @@
 """Benchmark harness — one entry per paper table/figure (deliverable d),
 plus the dry-run roofline report and the organization-accuracy sweep.
 
+Benchmarks self-register: each module decorates its entry point with
+:func:`register_benchmark`, which validates the ``main(smoke=False) ->
+dict`` contract at registration time (a bad signature fails at import,
+not halfway through a sweep).  The harness imports the benchmark modules
+and iterates the registry in registration order — there is no
+hand-maintained dispatch table to drift out of sync.
+
 Prints ``name,us_per_call,derived`` CSV blocks per benchmark and writes a
 machine-readable ``results/BENCH_photonic.json`` (per-bench wall time +
 derived metrics) so the perf/accuracy trajectory is tracked across PRs.
@@ -10,6 +17,7 @@ benchmark-smoke step to catch bit-rot without the full runtime).
 """
 
 import argparse
+import inspect
 import json
 import sys
 import time
@@ -17,6 +25,57 @@ import traceback
 from pathlib import Path
 
 RESULTS_DIR = Path(__file__).resolve().parents[1] / "results"
+
+# name -> main, in registration (== module import) order.
+_REGISTRY: "dict[str, object]" = {}
+
+
+def register_benchmark(name: str):
+    """Register ``fn`` as the benchmark ``name``'s entry point.
+
+    Validates the harness contract eagerly: ``fn`` must accept a
+    ``smoke`` keyword defaulting to ``False`` (the CI-sized subset
+    switch) — and at run time must return a ``dict`` of derived metrics
+    (the CI coverage asserts read ``report["benches"][name]["derived"]``).
+    Duplicate names raise at import so two modules cannot silently fight
+    over one report key.
+    """
+    if not isinstance(name, str) or not name:
+        raise TypeError(f"benchmark name must be a non-empty str, got {name!r}")
+
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"benchmark {name!r} is already registered")
+        try:
+            param = inspect.signature(fn).parameters.get("smoke")
+        except (TypeError, ValueError):  # builtins/partials without a signature
+            param = None
+        if (
+            param is None
+            or param.default is not False
+            or param.kind
+            not in (
+                inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                inspect.Parameter.KEYWORD_ONLY,
+            )
+        ):
+            raise TypeError(
+                f"benchmark {name!r} entry point must accept a smoke= keyword "
+                f"defaulting to False (got signature {fn})"
+            )
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def registered_benchmarks() -> "dict[str, object]":
+    """The canonical registry — read from the ``benchmarks.run`` module
+    instance the benchmark modules decorated into, which is NOT this
+    module's globals when run.py executes as ``__main__``."""
+    from benchmarks import run as canonical
+
+    return dict(canonical._REGISTRY)
 
 
 def main(argv=None) -> None:
@@ -33,7 +92,8 @@ def main(argv=None) -> None:
 
     launch_profile = profile.apply()
 
-    from benchmarks import (
+    # Importing a benchmark module registers its entry point.
+    from benchmarks import (  # noqa: F401
         fig5_scalability,
         fig7_system,
         fused_hotpath,
@@ -46,34 +106,25 @@ def main(argv=None) -> None:
         tp_scaling,
     )
 
-    benches = [
-        ("fig5_scalability", fig5_scalability.main),
-        ("table5_dpu", table5_dpu.main),
-        ("fig7_system", fig7_system.main),
-        ("noise_accuracy", noise_accuracy.main),
-        ("org_accuracy", org_accuracy.main),
-        ("org_design_space", org_design_space.main),
-        ("prepack_decode", prepack_decode.main),
-        ("fused_hotpath", fused_hotpath.main),
-        ("serve_latency", serve_latency.main),
-        ("tp_scaling", tp_scaling.main),
-    ]
     # roofline report requires dry-run results; degrade gracefully.
     try:
-        from benchmarks import roofline_report
-
-        benches.append(("roofline_report", roofline_report.main))
+        from benchmarks import roofline_report  # noqa: F401
     except Exception:
         pass
 
     failures = []
     report = {"smoke": args.smoke, "launch_profile": launch_profile, "benches": {}}
-    for name, fn in benches:
+    for name, fn in registered_benchmarks().items():
         print(f"\n===== {name} =====")
         t0 = time.time()
         derived = None
         try:
             derived = fn(smoke=args.smoke)
+            if not isinstance(derived, dict):
+                raise TypeError(
+                    f"benchmark {name!r} returned {type(derived).__name__}, "
+                    f"expected a dict of derived metrics"
+                )
             status = "ok"
             print(f"{name},{(time.time()-t0)*1e6:.0f},ok")
         except Exception:

@@ -31,6 +31,8 @@ from repro.models.common import init_tree
 from repro.runtime import serve
 from repro.serving import Request, Scheduler, ServingConfig
 
+from benchmarks.run import register_benchmark
+
 MAX_SEQ = 64
 BLOCK_SIZE = 16
 CHUNK_TOKENS = 32
@@ -182,6 +184,7 @@ def _cell_key(tp, bs, mix, load):
     return f"tp{tp}/bs{bs}/{mix}/load{load}"
 
 
+@register_benchmark("serve_latency")
 def main(smoke=False):
     arch, cfg, params = _model(smoke)
     tp_max = mesh_mod.max_tp_degree()

@@ -6,6 +6,8 @@ import time
 from repro.core import scalability as sc
 from repro.core.perfmodel import area_matched_counts
 
+from benchmarks.run import register_benchmark
+
 
 def run():
     print("table5,ours_vs_paper")
@@ -22,6 +24,7 @@ def run():
     return ours
 
 
+@register_benchmark("table5_dpu")
 def main(smoke=False):
     del smoke  # already CI-sized (9 closed-form cells)
     ours = run()

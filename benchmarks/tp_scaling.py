@@ -27,11 +27,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dpu import DPUConfig
+from repro.core.scalability import calibrated_max_n
 from repro.launch import mesh as mesh_mod
 from repro.models.common import ModelConfig, dense
-from repro.noise import build_channel_model, shard_local_channel
+from repro.noise import build_channel_model, shard_local_channel, sliced_channel
 from repro.orgs import ORGANIZATIONS as ORGS
 from repro.photonic import engine_for, prepack_params, tensor_parallel
+from repro.platforms import PLATFORMS
+
+from benchmarks.run import register_benchmark
 
 BITS = 4
 
@@ -63,6 +67,38 @@ def snr_sweep(k: int, shard_counts) -> dict:
             "per_shards": rows,
             "min_shards_for_enob": feasible[0] if feasible else None,
         }
+    return out
+
+
+def platform_sweep(k: int, plane_bits: int = 2) -> dict:
+    """Platform × organization scaling: how the material system moves the
+    achievable fan-in and the per-pass analog quality (PR-9 tentpole).
+
+    Per (platform, org): the calibrated max N (Fig. 5 operating point on
+    that platform's loss chain), the k-fan-in channel SNR/sigma, and the
+    detector sigma one ``plane_bits``-bit sliced pass sees on the same
+    hardware.  SiN's lower propagation/through loss must buy a larger
+    calibrated N than SOI, and a sliced plane must always see less
+    detector sigma than the full-width pass it replaces.
+    """
+    out = {}
+    for platform in PLATFORMS:
+        rows = {}
+        for org in ORGS:
+            ch = build_channel_model(
+                org, n=k, bits=BITS, datarate_gs=5.0, platform=platform
+            )
+            plane = sliced_channel(ch, plane_bits)
+            rows[org] = {
+                "calibrated_max_n": calibrated_max_n(
+                    org, BITS, 5.0, platform=platform
+                ),
+                "snr_db": round(ch.snr_db, 3),
+                "detector_sigma_lsb": round(ch.detector_sigma_lsb, 5),
+                "plane_detector_sigma_lsb": round(plane.detector_sigma_lsb, 5),
+                "total_loss_db": round(ch.total_loss_db(), 3),
+            }
+        out[platform] = rows
     return out
 
 
@@ -107,11 +143,13 @@ def throughput_sweep(k: int, c: int, tokens: int, iters: int) -> dict:
     return out
 
 
+@register_benchmark("tp_scaling")
 def main(smoke: bool = False) -> dict:
     k = 128 if smoke else 256
     shard_counts = [1, 2, 4, 8] if smoke else [1, 2, 4, 8, 16, 32]
     shard_counts = [s for s in shard_counts if k % s == 0 and k // s >= 1]
     snr = snr_sweep(k, shard_counts)
+    platforms = platform_sweep(k)
     thr = throughput_sweep(
         k=k,
         c=64 if smoke else 128,
@@ -130,6 +168,27 @@ def main(smoke: bool = False) -> dict:
         )
     for s, row in thr.items():
         print(f"tp={s}: {row['tokens_per_s']} tokens/s")
+    for platform, rows in platforms.items():
+        print(
+            f"{platform}: "
+            + " ".join(
+                f"{org}:maxN={r['calibrated_max_n']},snr={r['snr_db']}dB"
+                for org, r in rows.items()
+            )
+        )
+
+    # SiN's lower loss chain buys fan-in on every organization, and a
+    # bit-plane pass always sees less detector sigma than the full pass.
+    for org in ORGS:
+        assert (
+            platforms["SIN"][org]["calibrated_max_n"]
+            > platforms["SOI"][org]["calibrated_max_n"]
+        ), (org, platforms)
+        for platform in platforms:
+            r = platforms[platform][org]
+            assert (
+                r["plane_detector_sigma_lsb"] < r["detector_sigma_lsb"]
+            ), (platform, org, r)
 
     # The hitless SMWA needs the least sharding to reach the ENOB target;
     # ASMW (2(N-1) through rings) gains the most SNR per doubling.
@@ -149,6 +208,7 @@ def main(smoke: bool = False) -> dict:
         "devices": len(jax.devices()),
         "snr_vs_shards": snr,
         "snr_gain_db_at_max_shards": gain,
+        "platform_scaling": platforms,
         "throughput_vs_tp": thr,
     }
 

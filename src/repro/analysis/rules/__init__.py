@@ -10,6 +10,7 @@ from repro.analysis.rules import (  # noqa: F401
     engine,
     epilogue,
     orgs,
+    platforms,
     quant,
     randomness,
     serving,

@@ -6,8 +6,11 @@ routed GEMM's result leaves ``engine.matmul*`` already rescaled, biased
 and activated.  Model code that multiplies or adds onto an engine output
 afterwards re-introduces the materialized intermediate the fusion
 removed — and silently double-applies the shoulder if the epilogue was
-also requested.  The blessed spelling is ``dense(..., activation=...)``
-/ ``engine.matmul(..., bias=..., activation=...)``.
+also requested.  The blessed spelling is
+``dense(..., epilogue=EpilogueSpec(...))`` /
+``engine.matmul(..., epilogue=Epilogue(spec, bias))`` (PR-9 unified
+surface; the legacy ``bias=``/``activation=`` keywords survive only as
+deprecation shims).
 
 Only *engine* matmul results are tracked, by the receiver spelling:
 ``jnp.matmul`` / ``np.matmul`` and arithmetic on :func:`dense` outputs
@@ -55,8 +58,8 @@ class FusedEpilogueRule(Rule):
         "Engine GEMM results are epilogue-complete (rescale, bias, "
         "activation ride the fused EpilogueSpec); scaling or bias-adding "
         "them afterwards re-materializes the intermediate the fusion "
-        "removed — pass bias=/activation= to dense()/engine.matmul* "
-        "instead."
+        "removed — pass epilogue= (EpilogueSpec/Epilogue) to "
+        "dense()/engine.matmul* instead."
     )
 
     def applies_to(self, relpath: str) -> bool:
@@ -84,7 +87,7 @@ class FusedEpilogueRule(Rule):
                             relpath,
                             node,
                             "arithmetic on an engine matmul output; pass "
-                            "bias=/activation= so it rides the fused "
+                            "epilogue= so it rides the fused "
                             "epilogue",
                         )
                     )
@@ -108,7 +111,7 @@ class FusedEpilogueRule(Rule):
                                 relpath,
                                 stmt,
                                 "in-place arithmetic on an engine matmul "
-                                "output; pass bias=/activation= so it rides "
+                                "output; pass epilogue= so it rides "
                                 "the fused epilogue",
                             )
                         )

@@ -45,6 +45,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import platforms as _platforms
 from repro.core import scalability
 from repro.core.params import PhotonicParams
 from repro.noise.channel import (
@@ -69,7 +70,11 @@ class DPUConfig:
     four-letter block-order string ("MWAS"), or a typed
     :class:`repro.orgs.OrgSpec`; it is validated eagerly and stored as
     the canonical order name (unknown orders raise ``ValueError`` naming
-    the valid choices instead of a late ``KeyError``).
+    the valid choices instead of a late ``KeyError``).  ``platform``
+    follows the same pattern through :func:`repro.platforms.resolve`
+    (canonical name stored, eager ``ValueError`` on unknown names) and
+    selects the material platform the calibrated DPE size — and any
+    channel built from this config — is derived on.
     """
 
     organization: "str | OrgSpec" = "SMWA"
@@ -85,12 +90,16 @@ class DPUConfig:
     # Deterministic noise seed used when no prng_key is threaded to a call
     # (the documented deterministic path; see module docstring).
     noise_seed: Optional[int] = None
+    # Material platform (repro.platforms): canonical name after resolve.
+    platform: "str | _platforms.PlatformSpec" = "SOI"
 
     def __post_init__(self):
         # One resolution point (repro.orgs.resolve): eager validation, one
         # normalization.  Storing the canonical name keeps the config's
         # repr/equality/hash identical to the historical string form.
         object.__setattr__(self, "organization", resolve(self.organization).name)
+        # Same pattern for the platform (repro.platforms.resolve).
+        object.__setattr__(self, "platform", _platforms.resolve(self.platform).name)
 
     @property
     def org_spec(self) -> OrgSpec:
@@ -98,10 +107,17 @@ class DPUConfig:
         return resolve(self.organization)
 
     @property
+    def platform_spec(self) -> _platforms.PlatformSpec:
+        """The typed platform spec this config runs on (repro.platforms)."""
+        return _platforms.resolve(self.platform)
+
+    @property
     def n(self) -> int:
         if self.dpe_size is not None:
             return self.dpe_size
-        n = scalability.calibrated_max_n(self.organization, self.bits, self.datarate_gs)
+        n = scalability.calibrated_max_n(
+            self.organization, self.bits, self.datarate_gs, platform=self.platform
+        )
         if n <= 0:
             raise ValueError(
                 f"infeasible operating point: {self.organization} B={self.bits} "
@@ -147,6 +163,7 @@ class DPUConfig:
                 datarate_gs=self.datarate_gs,
                 detector_sigma_lsb=self.noise_sigma_lsb,
                 adc_bits=self.adc_bits,
+                platform=self.platform,
             )
         return None
 

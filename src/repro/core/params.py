@@ -55,6 +55,10 @@ class PhotonicParams:
     p_mrm_obl_db: float = 0.01         # MRM out-of-band (through) loss [dB]
     p_mrr_w_obl_db: float = 0.01       # weight-MRR out-of-band (through) loss [dB]
 
+    # Platform-owned (repro.platforms): laser electrical->optical wall-plug
+    # efficiency used by the accelerator power model (Sec. V-B assumes 20%).
+    laser_wallplug_eff: float = 0.2
+
     # Organization-dependent network penalties (Table IV, P_Penalty) --------
     penalty_asmw_db: float = 5.8
     penalty_masw_db: float = 4.8

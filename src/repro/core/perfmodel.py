@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
+from repro import platforms as _platforms
 from repro.core import scalability
 from repro.core.params import DEFAULT_PERIPHERALS, PeripheralParams, dbm_to_watts
 from repro.orgs import OrgSpec, resolve
@@ -28,17 +29,27 @@ class AcceleratorConfig:
     dpu_count: int = 50
     dpus_per_tile: int = 4
     peripherals: PeripheralParams = DEFAULT_PERIPHERALS
+    # Material platform (repro.platforms): owns the laser wall-plug
+    # efficiency and the ring tuning powers of the power model.
+    platform: "str | _platforms.PlatformSpec" = "SOI"
 
     def __post_init__(self):
         # Eager organization validation + case normalization: accept
         # str | OrgSpec, store the canonical name (unknown orders raise
         # ValueError naming the valid choices — repro.orgs.resolve).
         object.__setattr__(self, "organization", resolve(self.organization).name)
+        # Same pattern for the platform (repro.platforms.resolve).
+        object.__setattr__(self, "platform", _platforms.resolve(self.platform).name)
 
     @property
     def org_spec(self) -> OrgSpec:
         """The typed organization spec this config runs (repro.orgs)."""
         return resolve(self.organization)
+
+    @property
+    def platform_spec(self) -> _platforms.PlatformSpec:
+        """The typed platform spec this config runs on (repro.platforms)."""
+        return _platforms.resolve(self.platform)
 
     @property
     def symbol_s(self) -> float:
@@ -65,7 +76,10 @@ class AcceleratorConfig:
 
     @property
     def tune_power_w_per_ring(self) -> float:
-        return self.peripherals.eo_tuning_w_per_fsr * 0.5
+        # The per-FSR tuning power is platform-owned (Table VI tabulates
+        # the SOI value; repro.platforms.SOI carries it verbatim, so the
+        # default is unchanged — SiN's weaker EO effect costs more drive).
+        return self.platform_spec.eo_tuning_w_per_fsr * 0.5
 
     # ---- organization-dependent ring counts per DPU (Fig. 2) --------------
     @property
@@ -116,8 +130,10 @@ class AcceleratorConfig:
     # ---- power -------------------------------------------------------------
     def laser_power_w(self) -> float:
         """Laser wall power: N wavelengths per DPU (10 dBm each, shared
-        across the M DPEs by the splitting block), at 20% wall-plug eff."""
-        return self.dpu_count * self.n * dbm_to_watts(10.0) / 0.2
+        across the M DPEs by the splitting block), at the platform's
+        wall-plug efficiency (Sec. V-B assumes 20%; SOI carries that)."""
+        eff = self.platform_spec.laser_wallplug_eff
+        return self.dpu_count * self.n * dbm_to_watts(10.0) / eff
 
     def static_power_w(self) -> float:
         p = self.peripherals
@@ -169,11 +185,19 @@ class AcceleratorConfig:
         datarate_gs: float,
         bits: int = 4,
         dpu_count: int = 50,
+        *,
+        platform: "str | _platforms.PlatformSpec" = "SOI",
     ) -> "AcceleratorConfig":
         """Operating point from OUR calibrated solver (works for any valid
-        ordering, studied or not — the design-space benchmark's path)."""
+        ordering, studied or not — the design-space benchmark's path).
+        ``platform`` sizes N on that platform's loss chain and rides into
+        the config's power model; ``from_paper`` stays SOI-only (Table V
+        *is* the SOI calibration target)."""
         spec = resolve(organization)
-        n = scalability.calibrated_max_n(spec, bits, datarate_gs)
+        platform_spec = _platforms.resolve(platform)
+        n = scalability.calibrated_max_n(
+            spec, bits, datarate_gs, platform=platform_spec
+        )
         return AcceleratorConfig(
             organization=spec.name,
             datarate_gs=datarate_gs,
@@ -181,6 +205,7 @@ class AcceleratorConfig:
             n=n,
             m=n,
             dpu_count=dpu_count,
+            platform=platform_spec.name,
         )
 
 

@@ -22,6 +22,7 @@ import itertools
 import math
 from typing import Dict, Iterable, Tuple
 
+from repro import platforms as _platforms
 from repro.core.params import K_BOLTZMANN, Q_ELECTRON, PhotonicParams, watts_to_dbm
 from repro.orgs import ORGANIZATIONS, OrgSpec, resolve
 
@@ -258,14 +259,26 @@ def calibration() -> CalibrationResult:
 
 
 def calibrated_max_n(
-    organization: "str | OrgSpec", bits: float, datarate_gs: float
+    organization: "str | OrgSpec",
+    bits: float,
+    datarate_gs: float,
+    *,
+    platform: "str | _platforms.PlatformSpec" = "SOI",
 ) -> int:
-    """Achievable DPU size N at the calibrated operating point."""
+    """Achievable DPU size N at the calibrated operating point.
+
+    ``platform`` applies a :class:`repro.platforms.PlatformSpec` over the
+    calibrated parameters (loss fields only — the Table-V-calibrated
+    margins and under-specified fields are platform-independent), so the
+    SOI default reproduces the paper's Table V exactly and SiN answers
+    "how far does the same calibration scale on a lower-loss platform".
+    """
+    params = _platforms.resolve(platform).apply(CALIBRATED)
     return max_dpu_size(
         organization,
         bits,
         datarate_gs,
-        CALIBRATED,
+        params,
         snr_margin_db=_CALIBRATION.snr_margin_db,
         org_aware_through=_CALIBRATION.org_aware_through,
     )

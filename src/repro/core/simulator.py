@@ -180,13 +180,24 @@ def evaluate_all(
     datarates=(1, 5, 10),
     models=tuple(WORKLOADS),
     use_paper_operating_points: bool = True,
+    platform="SOI",
 ) -> Dict:
     """Fig. 7 sweep: (org x DR x CNN) -> SimResult.
 
     ``organizations`` accepts ``str | OrgSpec`` entries; results are keyed
-    by the canonical order name.  Unstudied orderings require
-    ``use_paper_operating_points=False`` (no Table V entry to read).
+    by the canonical order name.  Unstudied orderings — and any platform
+    other than the SOI baseline (Table V *is* an SOI table) — require
+    ``use_paper_operating_points=False`` so the operating point comes
+    from the calibrated solver on that platform's loss chain.
     """
+    from repro import platforms as _platforms
+
+    platform_name = _platforms.resolve(platform).name
+    if use_paper_operating_points and platform_name != "SOI":
+        raise ValueError(
+            f"paper operating points are SOI-only (Table V); pass "
+            f"use_paper_operating_points=False to sweep {platform_name!r}"
+        )
     out = {}
     for org in organizations:
         name = resolve(org).name
@@ -194,7 +205,9 @@ def evaluate_all(
             cfg = (
                 AcceleratorConfig.from_paper(org, dr)
                 if use_paper_operating_points
-                else AcceleratorConfig.from_scalability(org, dr)
+                else AcceleratorConfig.from_scalability(
+                    org, dr, platform=platform_name
+                )
             )
             for m in models:
                 out[(name, dr, m)] = simulate(m, cfg)

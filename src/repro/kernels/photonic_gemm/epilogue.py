@@ -90,6 +90,74 @@ class EpilogueArgs(NamedTuple):
     bias: Optional[jax.Array] = None
 
 
+class Epilogue(NamedTuple):
+    """The user-facing epilogue request of the unified GEMM surface.
+
+    A static :class:`EpilogueSpec` plus its runtime bias operand — what
+    ``engine.matmul`` / ``matmul_float`` / ``models.common.dense`` accept
+    as ``epilogue=`` (PR-9 API redesign).  ``spec.bias`` must agree with
+    ``bias is not None``; :func:`as_epilogue` enforces that eagerly.
+    """
+
+    spec: EpilogueSpec
+    bias: Optional[jax.Array] = None
+
+
+def as_epilogue(
+    epilogue=None,
+    *,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+) -> "tuple[EpilogueSpec, Optional[jax.Array]]":
+    """Normalize the unified ``epilogue=`` surface to ``(spec, bias)``.
+
+    The one resolution point for the GEMM surface's epilogue request:
+
+    * ``epilogue=EpilogueSpec(...)`` — bias-free spec (``spec.bias`` must
+      be False: the spec alone carries no bias operand);
+    * ``epilogue=Epilogue(spec, bias)`` — spec + bias operand;
+    * legacy ``bias=`` / ``activation=`` keywords (deprecation shims on
+      the engine surface) — folded into a spec exactly as the historical
+      call sites did, so shimmed calls stay bitwise-identical;
+    * nothing — the no-epilogue spec.
+
+    Mixing ``epilogue=`` with the legacy keywords raises ``TypeError``
+    eagerly (one spelling per call site; RPR008's blessed form is
+    ``epilogue=``).
+    """
+    if epilogue is None:
+        return EpilogueSpec(bias=bias is not None, activation=activation), bias
+    if bias is not None or activation is not None:
+        raise TypeError(
+            "pass either epilogue= or the legacy bias=/activation= "
+            "keywords, not both"
+        )
+    if isinstance(epilogue, Epilogue):
+        spec, b = epilogue
+        if not isinstance(spec, EpilogueSpec):
+            raise TypeError(
+                f"Epilogue.spec must be an EpilogueSpec, got "
+                f"{type(spec).__name__}"
+            )
+        if spec.bias != (b is not None):
+            raise TypeError(
+                f"Epilogue spec.bias={spec.bias} disagrees with its bias "
+                f"operand ({'present' if b is not None else 'absent'})"
+            )
+        return spec, b
+    if isinstance(epilogue, EpilogueSpec):
+        if epilogue.bias:
+            raise TypeError(
+                "EpilogueSpec(bias=True) carries no bias operand; pass "
+                "Epilogue(spec, bias) instead"
+            )
+        return epilogue, None
+    raise TypeError(
+        f"epilogue must be an EpilogueSpec or Epilogue, got "
+        f"{type(epilogue).__name__}"
+    )
+
+
 def quantize_tile(x: jax.Array, scale: jax.Array, qmax: float) -> jax.Array:
     """The in-kernel image of ``quantize_symmetric``'s rounding step.
 

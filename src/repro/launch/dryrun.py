@@ -114,7 +114,7 @@ def run_cell(
         "param_count": sum(
             int(jnp.prod(jnp.array(l.shape))) for l in compat.tree_leaves(param_sds)
         ),
-        "photonic_engine": None if eng is None else eng.describe(),
+        "photonic_engine": None if eng is None else eng.describe().to_dict(),
     }
 
     def build(bcfg):

@@ -98,6 +98,11 @@ class ModelConfig:
     # control flow; opt it in with photonic_exclude=().
     photonic_include: Tuple[str, ...] = ("*",)
     photonic_exclude: Tuple[str, ...] = ("router",)
+    # Bit-sliced execution mode (repro.photonic.slicing): None runs the
+    # hardware datapath unchanged; plane bits (int/str/SlicingSpec) run
+    # every routed GEMM as plane-pair passes re-referred to the plane
+    # full-scale (DESIGN.md §15 — the fidelity lever past ENOB saturation).
+    photonic_slicing: Any = None
 
     # Structural padding applied for mesh divisibility (see pad_for_mesh) ----
     padded_heads: Optional[int] = None
@@ -120,6 +125,13 @@ class ModelConfig:
             raise ValueError(
                 f"attn_impl={self.attn_impl!r} is not one of {impls}"
             )
+        # Eager normalization through THE slicing resolution point
+        # (unknown plane widths raise here, not at first GEMM).
+        from repro.photonic.slicing import resolve_slicing
+
+        object.__setattr__(
+            self, "photonic_slicing", resolve_slicing(self.photonic_slicing)
+        )
 
     @property
     def hd(self) -> int:
@@ -294,6 +306,7 @@ def engine_from_model_config(cfg: ModelConfig):
         cfg.photonic_backend,
         tuple(cfg.photonic_include),
         tuple(cfg.photonic_exclude),
+        slicing=cfg.photonic_slicing,
     )
 
 
@@ -305,6 +318,8 @@ def dense(
     site: Optional[str] = None,
     layer: Optional[jax.Array] = None,
     prng_key: Optional[jax.Array] = None,
+    epilogue: Any = None,
+    slicing: Any = None,
     activation: Optional[str] = None,
 ) -> jax.Array:
     """Linear layer; routes through the photonic engine when enabled.
@@ -317,12 +332,16 @@ def dense(
     with neither a key nor ``DPUConfig.noise_seed`` raises the documented
     ``ValueError``).
 
-    The bias (when the def has one) and an optional ``activation``
-    ("gelu"/"silu") are *not* applied here as separate ops: they ride the
-    engine's fused epilogue (``EpilogueSpec``, DESIGN.md §14) so routed
-    GEMMs never materialize the unrescaled or pre-activation intermediate
-    (RPR008 enforces this).  Digital fallbacks keep the historical op
-    order bit-for-bit.
+    ``epilogue=`` takes a bias-free :class:`EpilogueSpec` — the bias
+    operand always comes from the param def (``params["b"]``), so the
+    spec only selects the activation; the legacy ``activation=`` keyword
+    remains as a bitwise-identical shim.  Either way the bias and
+    activation are *not* applied here as separate ops: they ride the
+    engine's fused epilogue (DESIGN.md §14) so routed GEMMs never
+    materialize the unrescaled or pre-activation intermediate (RPR008
+    enforces this).  Digital fallbacks keep the historical op order
+    bit-for-bit.  ``slicing=`` overrides ``cfg.photonic_slicing`` for
+    this GEMM (bit-sliced execution, DESIGN.md §15).
 
     Under an active tensor-parallel scope
     (``repro.photonic.sharded.tensor_parallel`` / ``manual_tp``) routed
@@ -330,10 +349,30 @@ def dense(
     (site, layer, shard)-folded noise, digital-domain ``psum`` — bitwise
     equal to the single-device path under an ideal channel.
     """
+    from repro.photonic import Epilogue, EpilogueSpec
     from repro.photonic import sharded as tp
+
+    if epilogue is not None:
+        if activation is not None:
+            raise TypeError(
+                "pass either epilogue= or the legacy activation= keyword, "
+                "not both"
+            )
+        if not isinstance(epilogue, EpilogueSpec):
+            raise TypeError(
+                f"dense() takes a bias-free EpilogueSpec (the bias operand "
+                f"comes from the param def), got {type(epilogue).__name__}"
+            )
+        if epilogue.bias:
+            raise TypeError(
+                "dense() sources its bias from the param def; pass "
+                "EpilogueSpec(bias=False, ...)"
+            )
+        activation = epilogue.activation
 
     w = params["w"]
     bias = params.get("b")
+    ep = Epilogue(EpilogueSpec(bias=bias is not None, activation=activation), bias)
     eng = engine_from_model_config(cfg)
     y = tp.maybe_tp_matmul(
         eng,
@@ -343,8 +382,8 @@ def dense(
         site=site,
         fold=layer,
         prng_key=prng_key,
-        bias=bias,
-        activation=activation,
+        epilogue=ep,
+        slicing=slicing,
     )
     if y is None:
         y = _single_device_matmul(
@@ -356,37 +395,37 @@ def dense(
             site=site,
             layer=layer,
             prng_key=prng_key,
-            bias=bias,
-            activation=activation,
+            epilogue=ep,
+            slicing=slicing,
         )
     return y
 
 
-def _digital_epilogue(y, bias, activation):
+def _digital_epilogue(y, ep):
     """Bias/activation for fully digital matmuls — the historical op order
     (bias added in the output dtype, activation from the engine's shared
     table) so non-photonic paths are bitwise-unchanged by fusion."""
-    if bias is not None:
-        y = y + bias.astype(y.dtype)
-    if activation is not None:
+    if ep.bias is not None:
+        y = y + ep.bias.astype(y.dtype)
+    if ep.spec.activation is not None:
         from repro.photonic import ACTIVATIONS
 
-        y = ACTIVATIONS[activation](y)
+        y = ACTIVATIONS[ep.spec.activation](y)
     return y
 
 
 def _single_device_matmul(
-    eng, params, w, x, cfg, *, site, layer, prng_key, bias, activation
+    eng, params, w, x, cfg, *, site, layer, prng_key, epilogue, slicing=None
 ):
     """The non-sharded product of :func:`dense` (every weight layout)."""
     from repro.photonic.packing import PackedDense
 
     if isinstance(w, PackedDense):
         if eng is None:
-            return _digital_epilogue(x @ w.dequant().astype(x.dtype), bias, activation)
+            return _digital_epilogue(x @ w.dequant().astype(x.dtype), epilogue)
         return eng.matmul(
             x, w, site=site, fold=layer, prng_key=prng_key,
-            bias=bias, activation=activation,
+            epilogue=epilogue, slicing=slicing,
         )
     if "w_scale" in params:
         # int8-stored weights through the DPU integer datapath (legacy
@@ -401,14 +440,14 @@ def _single_device_matmul(
         )
         return eng.matmul(
             x, packed, site=site, fold=layer, prng_key=prng_key,
-            bias=bias, activation=activation,
+            epilogue=epilogue, slicing=slicing,
         )
     if eng is not None and cfg.photonic_scope == "weights":
         return eng.matmul_float(
             x, w, site=site, fold=layer, prng_key=prng_key,
-            bias=bias, activation=activation,
+            epilogue=epilogue, slicing=slicing,
         )
-    return _digital_epilogue(x @ w.astype(x.dtype), bias, activation)
+    return _digital_epilogue(x @ w.astype(x.dtype), epilogue)
 
 
 def quantize_params(params: Any, defs: Any) -> Any:

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.models import common as cm
 from repro.models.common import P, ModelConfig, dense, qdense_def
+from repro.photonic import EpilogueSpec
 
 
 # ---------------------------------------------------------------------------
@@ -45,7 +46,7 @@ def mlp(params, x: jax.Array, cfg: ModelConfig, layer=None, site="ffn") -> jax.A
         # epilogue (DESIGN.md §14); digital fallback applies the same op.
         h = dense(
             params["wi"], x, cfg, site=f"{site}.wi", layer=layer,
-            activation="gelu",
+            epilogue=EpilogueSpec(activation="gelu"),
         )
     return dense(params["wo"], h, cfg, site=f"{site}.wo", layer=layer)
 

@@ -13,6 +13,7 @@ from repro.noise.channel import (
     apply_channel_psum,
     build_channel_model,
     shard_local_channel,
+    sliced_channel,
 )
 from repro.noise.stages import (
     adc_quantize,
@@ -34,6 +35,7 @@ __all__ = [
     "apply_channel_psum",
     "build_channel_model",
     "shard_local_channel",
+    "sliced_channel",
     "adc_quantize",
     "data_tweak",
     "detector_noise",

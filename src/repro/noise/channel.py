@@ -36,6 +36,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import platforms as _platforms
 from repro.core import scalability
 from repro.core.params import PhotonicParams, dbm_to_watts
 from repro.noise import stages
@@ -73,6 +74,11 @@ class ChannelModel:
     penalty_db: float = 0.0
     delivered_dbm: float = 0.0
     snr_db: float = math.inf
+
+    # Material platform the loss chain was derived on (repro.platforms);
+    # provenance only — the quantitative effect already rides the loss /
+    # sigma fields above.
+    platform: str = "SOI"
 
     # Builder provenance (set by :func:`build_channel_model`): the as-given
     # arguments, minus ``n``, that produced this model.  Lets
@@ -158,6 +164,7 @@ def build_channel_model(
     enable_crosstalk: bool = True,
     enable_detector_noise: bool = True,
     enable_adc: bool = True,
+    platform: "str | _platforms.PlatformSpec" = "SOI",
 ) -> ChannelModel:
     """Derive the quantitative channel model for one organization.
 
@@ -165,18 +172,27 @@ def build_channel_model(
     a typed :class:`repro.orgs.OrgSpec` (one resolution point — unknown or
     wrong-case orders raise ``ValueError`` naming the valid choices); the
     Table II/III structure is derived from the block order, so unstudied
-    orderings get a physically consistent channel.  ``n`` defaults to the
-    calibrated achievable DPE size at (B, DR); ``m`` defaults to ``n``
-    (paper assumption).  ``enable_loss=False`` zeroes the loss chain *for
-    the SNR computation* (the detector then sees the full laser power),
-    which isolates the crosstalk stages in ablations.
+    orderings get a physically consistent channel.  ``platform`` accepts
+    a name or a :class:`repro.platforms.PlatformSpec` (resolved through
+    ``repro.platforms.resolve``, the same eager single-point validation)
+    and replaces the platform-owned loss fields of ``params`` before the
+    chain is derived — the SOI default is the identity.  ``n`` defaults
+    to the calibrated achievable DPE size at (B, DR) *on that platform*;
+    ``m`` defaults to ``n`` (paper assumption).  ``enable_loss=False``
+    zeroes the loss chain *for the SNR computation* (the detector then
+    sees the full laser power), which isolates the crosstalk stages in
+    ablations.
     """
     spec = resolve(organization)
     org = spec.name
     m_given = m  # provenance: record m as-given (None = paper's m=n rule)
-    params = params or scalability.CALIBRATED
+    platform_spec = _platforms.resolve(platform)
+    params_given = params  # provenance: pre-platform (None = calibrated)
+    params = platform_spec.apply(params or scalability.CALIBRATED)
     if n is None:
-        n = scalability.calibrated_max_n(spec, bits, datarate_gs)
+        n = scalability.calibrated_max_n(
+            spec, bits, datarate_gs, platform=platform_spec
+        )
         if n <= 0:
             raise ValueError(
                 f"infeasible operating point {org} B={bits} DR={datarate_gs}"
@@ -247,7 +263,7 @@ def build_channel_model(
 
     builder = (
         org,
-        params,
+        params_given,
         m_given,
         bits,
         datarate_gs,
@@ -256,9 +272,11 @@ def build_channel_model(
         enable_crosstalk,
         enable_detector_noise,
         enable_adc,
+        platform_spec.name,
     )
     return ChannelModel(
         organization=org,
+        platform=platform_spec.name,
         n=n,
         m=m,
         bits=bits,
@@ -306,33 +324,7 @@ def shard_local_channel(channel: ChannelModel, n_local: int) -> ChannelModel:
             n=n_local,
             num_wavelengths=min(channel.num_wavelengths, n_local),
         )
-    (
-        org,
-        params,
-        m_given,
-        bits,
-        datarate_gs,
-        adc_bits,
-        enable_loss,
-        enable_crosstalk,
-        enable_detector_noise,
-        enable_adc,
-    ) = channel.builder
-    def rebuild(n):
-        return build_channel_model(
-            org,
-            params,
-            n=n,
-            m=m_given,
-            bits=bits,
-            datarate_gs=datarate_gs,
-            adc_bits=adc_bits,
-            enable_loss=enable_loss,
-            enable_crosstalk=enable_crosstalk,
-            enable_detector_noise=enable_detector_noise,
-            enable_adc=enable_adc,
-        )
-
+    rebuild = _rebuilder(channel.builder)
     rebuilt = rebuild(n_local)
     # Re-apply the caller's per-stage state: the n-independent magnitudes
     # (crosstalk couplings, filter alpha, ADC range) are taken from the
@@ -344,6 +336,88 @@ def shard_local_channel(channel: ChannelModel, n_local: int) -> ChannelModel:
     sigma = rebuilt.detector_sigma_lsb
     if channel.detector_sigma_lsb != rebuild(channel.n).detector_sigma_lsb:
         sigma = channel.detector_sigma_lsb
+    return dataclasses.replace(
+        rebuilt,
+        intermod_eps=channel.intermod_eps,
+        crossweight_eps=channel.crossweight_eps,
+        filter_alpha=channel.filter_alpha,
+        adc_bits=channel.adc_bits,
+        detector_sigma_lsb=sigma,
+    )
+
+
+def _rebuilder(builder: tuple):
+    """Re-derivation closure over a ChannelModel's recorded builder args.
+
+    Returns ``rebuild(n, bits=None)`` — the model the builder would have
+    produced at fan-in ``n`` (and, optionally, a different analog
+    precision), with every other as-given argument replayed verbatim.
+    """
+    (
+        org,
+        params,
+        m_given,
+        bits_given,
+        datarate_gs,
+        adc_bits,
+        enable_loss,
+        enable_crosstalk,
+        enable_detector_noise,
+        enable_adc,
+        platform,
+    ) = builder
+
+    def rebuild(n: int, bits: Optional[int] = None) -> ChannelModel:
+        return build_channel_model(
+            org,
+            params,
+            n=n,
+            m=m_given,
+            bits=bits_given if bits is None else bits,
+            datarate_gs=datarate_gs,
+            adc_bits=adc_bits,
+            enable_loss=enable_loss,
+            enable_crosstalk=enable_crosstalk,
+            enable_detector_noise=enable_detector_noise,
+            enable_adc=enable_adc,
+            platform=platform,
+        )
+
+    return rebuild
+
+
+def sliced_channel(channel: ChannelModel, plane_bits: int) -> ChannelModel:
+    """The channel one bit-plane pass of the sliced execution mode sees.
+
+    Bit-slicing (DESIGN.md §15) runs the *same* hardware — fan-in N,
+    delivered power, loss chain all unchanged — but each analog pass
+    carries a ``plane_bits``-bit operand plane instead of a full B-bit
+    slice.  The per-pass product full-scale shrinks from ``(2^B - 1)^2``
+    to ``(2^p - 1)^2`` psum LSBs, and the detector sigma (which is
+    referred to that full-scale) shrinks with it; the crosstalk couplings
+    are relative amplitudes and carry over unchanged.
+
+    Models built by :func:`build_channel_model` are re-derived from their
+    recorded builder arguments at ``bits=plane_bits`` (same N); hand-
+    constructed models re-refer their sigma by the full-scale ratio.
+    Caller-disabled stages and sigma overrides survive exactly as in
+    :func:`shard_local_channel`.
+    """
+    plane_bits = int(plane_bits)
+    if plane_bits == channel.bits:
+        return channel
+    scale = float((2**plane_bits - 1) ** 2) / float((2**channel.bits - 1) ** 2)
+    if channel.builder is None:
+        return dataclasses.replace(
+            channel,
+            bits=plane_bits,
+            detector_sigma_lsb=channel.detector_sigma_lsb * scale,
+        )
+    rebuild = _rebuilder(channel.builder)
+    rebuilt = rebuild(channel.n, plane_bits)
+    sigma = rebuilt.detector_sigma_lsb
+    if channel.detector_sigma_lsb != rebuild(channel.n).detector_sigma_lsb:
+        sigma = channel.detector_sigma_lsb * scale
     return dataclasses.replace(
         rebuilt,
         intermod_eps=channel.intermod_eps,

@@ -20,10 +20,17 @@ image of that: quantize/pack the weight once, stream activations through.
 # kernel internals (RPR003).
 from repro.kernels.photonic_gemm.epilogue import (
     ACTIVATIONS,
+    Epilogue,
     EpilogueArgs,
     EpilogueSpec,
+    as_epilogue,
 )
-from repro.photonic.engine import PhotonicEngine, SitePolicy, engine_for
+from repro.photonic.engine import (
+    EngineInfo,
+    PhotonicEngine,
+    SitePolicy,
+    engine_for,
+)
 from repro.photonic.packing import (
     PackedDense,
     fuse_qkv_params,
@@ -36,20 +43,26 @@ from repro.photonic.sharded import (
     shard_local_engine,
     tensor_parallel,
 )
+from repro.photonic.slicing import SlicingSpec, resolve_slicing
 
 __all__ = [
     "ACTIVATIONS",
+    "EngineInfo",
+    "Epilogue",
     "EpilogueArgs",
     "EpilogueSpec",
     "PhotonicEngine",
     "SitePolicy",
+    "SlicingSpec",
     "PackedDense",
+    "as_epilogue",
     "engine_for",
     "fuse_qkv_params",
     "manual_tp",
     "pack_dense",
     "prepack_params",
     "psum_int_gemm",
+    "resolve_slicing",
     "shard_local_engine",
     "tensor_parallel",
 ]

@@ -45,27 +45,32 @@ import jax.numpy as jnp
 from repro.analysis.contracts import count_weight_round_ops  # noqa: F401
 from repro.core.dpu import (
     DPUConfig,
+    bit_slices,
     quant_scale,
     quantize_symmetric,
     quantize_with_scale,
 )
 from repro.kernels.photonic_gemm.epilogue import (
     ACTIVATIONS,
+    Epilogue,
     EpilogueArgs,
     EpilogueSpec,
     apply_epilogue,
+    as_epilogue,
 )
 from repro.kernels.photonic_gemm.kernel import (
     photonic_gemm_fused_pallas,
     photonic_gemm_pallas,
 )
 from repro.kernels.photonic_gemm.ref import exact_int_gemm, photonic_gemm_ref
+from repro.noise.channel import sliced_channel
 from repro.noise.stages import (
     data_tweak,
     fold_seed,
     key_zero_cotangent,
     seed_from_key,
 )
+from repro.photonic.slicing import SlicingSpec, resolve_slicing
 
 BACKENDS = ("ref", "pallas", "exact")
 
@@ -73,6 +78,12 @@ BACKENDS = ("ref", "pallas", "exact")
 # and (site, shard=i) streams never coincide (repro.photonic.sharded folds
 # the mesh-axis index of each K-shard through this).
 SHARD_STREAM_TAG = 0x5348
+
+# Stream-domain tag for the bit-plane index of a sliced GEMM (DESIGN.md
+# §15): each plane-pair pass folds (tag, plane) behind the site/fold/shard
+# scheme, so plane streams decorrelate from each other and never collide
+# with a layer-fold or shard stream.
+PLANE_STREAM_TAG = 0x504C
 
 
 def _round_up(x: int, m: int) -> int:
@@ -175,13 +186,68 @@ class SitePolicy:
 
 
 @dataclasses.dataclass(frozen=True)
+class EngineInfo:
+    """Structured ``PhotonicEngine.describe()`` result (PR-9 API redesign).
+
+    A frozen snapshot of the engine's operating point — org, platform,
+    backend, slicing mode, channel provenance — consumable as data
+    (:meth:`to_dict`, e.g. for the dry-run manifest) while ``str(info)``
+    renders the exact human-readable line ``describe()`` historically
+    returned, so f-string/logging call sites are unchanged.
+    """
+
+    backend: str
+    organization: str
+    platform: str
+    blocks: Tuple[str, ...]
+    through_devices: str
+    bits: int
+    n: int
+    datarate_gs: float
+    channel: str  # "analog" | "ideal"
+    slicing: Optional[int]  # plane bits, or None (unsliced)
+    include: Tuple[str, ...]
+    exclude: Tuple[str, ...]
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        # Byte-identical to the historical describe() text at the SOI /
+        # unsliced defaults; non-default platform or slicing is inserted
+        # between the channel and sites fields.
+        extra = "" if self.platform == "SOI" else f"platform={self.platform}, "
+        if self.slicing is not None:
+            extra += f"slicing={self.slicing}b planes, "
+        return (
+            f"{self.backend} backend, {self.organization} "
+            f"(blocks {'->'.join(self.blocks)}, through {self.through_devices}) "
+            f"B={self.bits} N={self.n} @ {self.datarate_gs} GS/s, "
+            f"channel={self.channel}, {extra}"
+            f"sites include={list(self.include)} "
+            f"exclude={list(self.exclude)}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class PhotonicEngine:
     """Frozen photonic operating point + routing policy (hashable, so it
-    can ride through ``jit`` closures and ``custom_vjp`` static args)."""
+    can ride through ``jit`` closures and ``custom_vjp`` static args).
+
+    ``slicing`` selects the bit-sliced execution mode (DESIGN.md §15):
+    when set, every routed GEMM decomposes its int operands into
+    ``plane_bits``-wide signed-magnitude planes, runs each plane pair
+    through the analog channel re-referred to the plane full-scale, and
+    recombines with exact digital shifts.  Under an ideal channel the
+    result is bit-identical to the unsliced exact GEMM; under a noisy
+    channel each plane pass draws a decorrelated stream (the plane index
+    folds behind the site/fold/shard scheme).
+    """
 
     dpu: DPUConfig = DPUConfig()
     backend: str = "ref"
     policy: SitePolicy = SitePolicy()
+    slicing: Optional[SlicingSpec] = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -189,22 +255,38 @@ class PhotonicEngine:
                 f"unknown photonic backend {self.backend!r}; expected one of "
                 f"{BACKENDS}"
             )
+        # Normalize through THE slicing resolution point (None | int |
+        # str | SlicingSpec -> Optional[SlicingSpec], eager ValueError).
+        object.__setattr__(self, "slicing", resolve_slicing(self.slicing))
 
     # -- policy --------------------------------------------------------------
     def routes(self, site: Optional[str]) -> bool:
         return self.policy.routes(site)
 
-    def describe(self) -> str:
+    def with_slicing(self, slicing) -> "PhotonicEngine":
+        """This engine with a different slicing mode (frozen-replace)."""
+        spec = resolve_slicing(slicing)
+        if spec == self.slicing:
+            return self
+        return dataclasses.replace(self, slicing=spec)
+
+    def describe(self) -> EngineInfo:
         d = self.dpu
         ch = d.effective_channel()
         spec = d.org_spec
-        return (
-            f"{self.backend} backend, {d.organization} "
-            f"(blocks {'->'.join(spec.blocks)}, through {spec.through_devices}) "
-            f"B={d.bits} N={d.n} @ {d.datarate_gs} GS/s, "
-            f"channel={'analog' if ch is not None and ch.analog else 'ideal'}, "
-            f"sites include={list(self.policy.include)} "
-            f"exclude={list(self.policy.exclude)}"
+        return EngineInfo(
+            backend=self.backend,
+            organization=d.organization,
+            platform=ch.platform if ch is not None else d.platform,
+            blocks=tuple(spec.blocks),
+            through_devices=spec.through_devices,
+            bits=d.bits,
+            n=d.n,
+            datarate_gs=d.datarate_gs,
+            channel="analog" if ch is not None and ch.analog else "ideal",
+            slicing=None if self.slicing is None else self.slicing.plane_bits,
+            include=tuple(self.policy.include),
+            exclude=tuple(self.policy.exclude),
         )
 
     # -- seed derivation -----------------------------------------------------
@@ -216,6 +298,7 @@ class PhotonicEngine:
         xq: jax.Array,
         wq: jax.Array,
         shard=None,
+        plane=None,
     ) -> jax.Array:
         """uint32 noise-stream seed for one GEMM call.
 
@@ -228,8 +311,10 @@ class PhotonicEngine:
         operand contents coincide.  ``shard`` is the (traced) mesh-axis
         index of a K-sharded call, folded behind a tag so shards draw
         decorrelated noise and the shard stream never collides with a
-        layer-fold stream.  ``site=None, fold=None, shard=None`` is
-        bitwise the legacy derivation.
+        layer-fold stream; ``plane`` is the plane-pair index of a
+        bit-sliced call, folded behind its own tag the same way.
+        ``site=None, fold=None, shard=None, plane=None`` is bitwise the
+        legacy derivation.
         """
         if prng_key is not None:
             key = prng_key
@@ -240,6 +325,9 @@ class PhotonicEngine:
             if shard is not None:
                 key = jax.random.fold_in(key, SHARD_STREAM_TAG)
                 key = jax.random.fold_in(key, shard)
+            if plane is not None:
+                key = jax.random.fold_in(key, PLANE_STREAM_TAG)
+                key = jax.random.fold_in(key, plane)
             seed = seed_from_key(key)
         else:
             seed = self.dpu.noise_seed_array(None)
@@ -249,6 +337,10 @@ class PhotonicEngine:
                 seed = fold_seed(seed, fold)
             if shard is not None:
                 seed = fold_seed(seed, jnp.uint32(SHARD_STREAM_TAG), shard)
+            if plane is not None:
+                seed = fold_seed(
+                    seed, jnp.uint32(PLANE_STREAM_TAG), jnp.uint32(plane)
+                )
         # Operand-content tweak (zero-padding is hash-neutral, so padded
         # prepacked weights derive the same stream as per-call operands).
         return data_tweak(seed, xq, wq)
@@ -262,6 +354,7 @@ class PhotonicEngine:
         site: Optional[str] = None,
         fold=None,
         shard=None,
+        plane=None,
         prng_key: Optional[jax.Array] = None,
         logical_kc: Optional[Tuple[int, int]] = None,
         tiling: Optional[Tuple[int, int, int]] = None,
@@ -269,14 +362,21 @@ class PhotonicEngine:
         tile_r: int = 128,
         tile_c: int = 128,
         epilogue: Optional[EpilogueArgs] = None,
+        slicing=None,
     ) -> jax.Array:
         """Integer GEMM through the DPU datapath; int32 (R, C).
 
         ``logical_kc``/``tiling`` describe a prepacked, tile-padded weight
         (see :class:`repro.photonic.packing.PackedDense`); without them
         the weight is taken at face value and padded per call.  ``shard``
-        is the mesh-axis index of a K-sharded call (see
-        :meth:`stream_seed`); it only perturbs the noise stream.
+        is the mesh-axis index of a K-sharded call and ``plane`` the
+        plane-pair index of a bit-sliced one (see :meth:`stream_seed`);
+        both only perturb the noise stream.
+
+        ``slicing`` overrides the engine's bit-slicing mode for this call
+        (``None`` inherits ``self.slicing``; pass ``"none"`` to force the
+        unsliced datapath).  The ``exact`` backend ignores slicing — the
+        plane decomposition is exact, so sliced-exact == exact.
 
         With ``epilogue`` this is the *fused hot path* (DESIGN.md §14):
         ``xq`` may be a float activation — quantized against
@@ -286,6 +386,22 @@ class PhotonicEngine:
         returning f32 ``(R, C)``.  Without it the historical integer
         contract is unchanged: int in, int32 out.
         """
+        mode = self.slicing if slicing is None else resolve_slicing(slicing)
+        if mode is not None and self.backend != "exact":
+            return self._sliced_int_gemm(
+                mode,
+                xq,
+                wq,
+                site=site,
+                fold=fold,
+                shard=shard,
+                prng_key=prng_key,
+                logical_kc=logical_kc,
+                interpret=interpret,
+                tile_r=tile_r,
+                tile_c=tile_c,
+                epilogue=epilogue,
+            )
         k, c = logical_kc if logical_kc is not None else wq.shape[-2:]
         cfg = self.dpu
         channel = cfg.effective_channel()
@@ -311,7 +427,7 @@ class PhotonicEngine:
             return acc if epilogue is None else _finish(acc, epilogue)
 
         seed = (
-            self.stream_seed(site, fold, prng_key, xq, wq, shard=shard)
+            self.stream_seed(site, fold, prng_key, xq, wq, shard=shard, plane=plane)
             if noisy
             else None
         )
@@ -381,6 +497,71 @@ class PhotonicEngine:
         )
         return out[:r, :c]
 
+    def _sliced_int_gemm(
+        self,
+        mode: SlicingSpec,
+        xq: jax.Array,
+        wq: jax.Array,
+        *,
+        site,
+        fold,
+        shard,
+        prng_key,
+        logical_kc,
+        interpret,
+        tile_r,
+        tile_c,
+        epilogue: Optional[EpilogueArgs],
+    ) -> jax.Array:
+        """Bit-sliced execution (DESIGN.md §15): decompose both operands
+        into ``mode.plane_bits``-wide signed-magnitude planes, run every
+        plane pair through the analog channel re-referred to the plane
+        full-scale (:func:`repro.noise.sliced_channel`), recombine with
+        exact digital shifts.  Each pass folds its plane-pair index into
+        the noise stream, so plane passes decorrelate; under an ideal
+        channel the shift-add recombination is bit-identical to
+        :func:`exact_int_gemm`.
+
+        Prepacked tilings are dropped — plane passes run at the plane
+        engine's own tiling over the logical ``(K, C)`` region (the plane
+        operands are re-materialized per call anyway).
+        """
+        cfg = self.dpu
+        k, c = logical_kc if logical_kc is not None else wq.shape[-2:]
+        if jnp.issubdtype(xq.dtype, jnp.floating):
+            if epilogue is None:
+                raise TypeError(
+                    "int_gemm got float activations without an EpilogueArgs; "
+                    "quantize explicitly or pass epilogue= (fused hot path)"
+                )
+            # Planes are precomputed digitally, so the activation is
+            # always quantized up front (same op sequence as in-kernel).
+            xq = quantize_with_scale(xq, epilogue.x_scale, cfg.operand_bits)
+        plane_eng = _plane_engine(self, mode)
+        p = mode.plane_bits
+        planes = mode.num_planes(cfg.operand_bits)
+        x_pl = bit_slices(xq, p, planes)  # (P, R, K) int8
+        w_pl = bit_slices(wq[:k, :c], p, planes)  # (P, K, C) int8
+        acc = jnp.zeros((xq.shape[0], c), jnp.int32)
+        for si in range(planes):
+            for ti in range(planes):
+                part = plane_eng.int_gemm(
+                    x_pl[si],
+                    w_pl[ti],
+                    site=site,
+                    fold=fold,
+                    shard=shard,
+                    plane=si * planes + ti,
+                    prng_key=prng_key,
+                    interpret=interpret,
+                    tile_r=tile_r,
+                    tile_c=tile_c,
+                )
+                # Exact digital recombination: q = sum_s plane_s * 2^(p*s)
+                # per operand => plane-pair products shift by p*(si+ti).
+                acc = acc + part * (1 << (p * (si + ti)))
+        return acc if epilogue is None else _finish(acc, epilogue)
+
     # -- float entry points (STE-differentiable) -----------------------------
     def matmul_float(
         self,
@@ -390,20 +571,27 @@ class PhotonicEngine:
         site: Optional[str] = None,
         fold=None,
         prng_key: Optional[jax.Array] = None,
+        epilogue=None,
+        slicing=None,
         bias: Optional[jax.Array] = None,
         activation: Optional[str] = None,
     ) -> jax.Array:
         """Float GEMM, quantizing *both* operands per call (QAT/train path).
 
-        ``bias``/``activation`` ride the fused epilogue (DESIGN.md §14)
-        instead of materializing a post-GEMM add in the caller.
-        Non-routed sites fall back to the exact digital op order.
+        ``epilogue=`` (an :class:`EpilogueSpec` or :class:`Epilogue`) is
+        the blessed spelling of the fused epilogue request (DESIGN.md
+        §14); the legacy ``bias=``/``activation=`` keywords remain as
+        bitwise-identical deprecation shims (:func:`as_epilogue` is the
+        single normalization point).  ``slicing`` overrides the engine's
+        bit-slicing mode for this call.  Non-routed sites fall back to
+        the exact digital op order.
         """
-        spec = EpilogueSpec(bias=bias is not None, activation=activation)
-        if not self.routes(site):
+        spec, bias = as_epilogue(epilogue, bias=bias, activation=activation)
+        eng = self if slicing is None else self.with_slicing(slicing)
+        if not eng.routes(site):
             return _digital_reference(x, w.astype(x.dtype), bias, spec)
         fold = None if fold is None else jnp.asarray(fold, jnp.int32)
-        return _float_matmul((self, site, spec), x, w, bias, fold, prng_key)
+        return _float_matmul((eng, site, spec), x, w, bias, fold, prng_key)
 
     def matmul(
         self,
@@ -413,6 +601,8 @@ class PhotonicEngine:
         site: Optional[str] = None,
         fold=None,
         prng_key: Optional[jax.Array] = None,
+        epilogue=None,
+        slicing=None,
         bias: Optional[jax.Array] = None,
         activation: Optional[str] = None,
     ) -> jax.Array:
@@ -421,14 +611,41 @@ class PhotonicEngine:
         float32 activation the quantization itself is deferred into the
         Pallas kernel prologue.
 
-        Non-routed sites execute the dequantized digital matmul.
+        Accepts the unified ``epilogue=``/``slicing=`` surface exactly as
+        :meth:`matmul_float` (legacy ``bias=``/``activation=`` keywords
+        are bitwise-identical shims).  Non-routed sites execute the
+        dequantized digital matmul.
         """
-        spec = EpilogueSpec(bias=bias is not None, activation=activation)
-        if not self.routes(site):
+        spec, bias = as_epilogue(epilogue, bias=bias, activation=activation)
+        eng = self if slicing is None else self.with_slicing(slicing)
+        if not eng.routes(site):
             return _digital_reference(x, packed.dequant().astype(x.dtype), bias, spec)
         fold = None if fold is None else jnp.asarray(fold, jnp.int32)
-        meta = (self, site, packed.k, packed.c, packed.tiling, spec)
+        meta = (eng, site, packed.k, packed.c, packed.tiling, spec)
         return _packed_matmul(meta, x, packed.wq, packed.w_scale, bias, fold, prng_key)
+
+
+@functools.lru_cache(maxsize=None)
+def _plane_engine(engine: PhotonicEngine, mode: SlicingSpec) -> PhotonicEngine:
+    """The single-plane-pass engine of a sliced ``engine``: analog
+    precision = plane width (one slice pass, no hardware re-slicing),
+    geometry frozen at the parent's achievable N (slicing is an execution
+    mode, not a different accelerator), channel re-referred to the plane
+    full-scale.  Cached so jit retraces see one frozen engine identity.
+    """
+    cfg = engine.dpu
+    p = mode.plane_bits
+    updates = dict(bits=p, operand_bits=p, dpe_size=cfg.n)
+    if cfg.channel is not None:
+        updates["channel"] = sliced_channel(cfg.channel, p)
+    elif cfg.noise_sigma_lsb > 0.0:
+        # Legacy raw-sigma configs: sigma is referred to the product
+        # full-scale, which shrinks with the plane width.
+        scale = float((2**p - 1) ** 2) / float((2**cfg.bits - 1) ** 2)
+        updates["noise_sigma_lsb"] = cfg.noise_sigma_lsb * scale
+    return dataclasses.replace(
+        engine, dpu=dataclasses.replace(cfg, **updates), slicing=None
+    )
 
 
 @functools.lru_cache(maxsize=None)
@@ -437,10 +654,16 @@ def engine_for(
     backend: str,
     include: Tuple[str, ...] = ("*",),
     exclude: Tuple[str, ...] = ("router",),
+    slicing=None,
 ) -> PhotonicEngine:
     """Cached engine construction (one frozen engine per operating point,
     so ``jit`` retraces don't multiply)."""
-    return PhotonicEngine(dpu=dpu, backend=backend, policy=SitePolicy(include, exclude))
+    return PhotonicEngine(
+        dpu=dpu,
+        backend=backend,
+        policy=SitePolicy(include, exclude),
+        slicing=resolve_slicing(slicing),
+    )
 
 
 # ---------------------------------------------------------------------------

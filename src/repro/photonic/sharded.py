@@ -57,7 +57,7 @@ import jax.numpy as jnp
 from repro import compat
 from repro.compat import PartitionSpec as P
 from repro.core.dpu import quantize_symmetric
-from repro.kernels.photonic_gemm.epilogue import EpilogueSpec, apply_epilogue
+from repro.kernels.photonic_gemm.epilogue import apply_epilogue, as_epilogue
 from repro.noise.stages import key_zero_cotangent
 from repro.photonic.engine import PhotonicEngine, _epilogue_bwd
 from repro.photonic.packing import PackedDense
@@ -454,6 +454,8 @@ def maybe_tp_matmul(
     site: Optional[str] = None,
     fold=None,
     prng_key: Optional[jax.Array] = None,
+    epilogue=None,
+    slicing=None,
     bias: Optional[jax.Array] = None,
     activation: Optional[str] = None,
 ) -> Optional[jax.Array]:
@@ -463,8 +465,11 @@ def maybe_tp_matmul(
     degree 1, a site the policy keeps digital, a contraction K the axis
     does not divide, or a pack layout the active mode cannot shard —
     and the caller falls through to the single-device path.
-    ``bias``/``activation`` ride the fused epilogue inside the collective
-    body (replicated operands, applied after the psum).
+    ``epilogue=`` rides the fused epilogue inside the collective body
+    (replicated operands, applied after the psum); the legacy ``bias=``/
+    ``activation=`` keywords are bitwise-identical shims.  ``slicing``
+    overrides the engine's bit-slicing mode — it rides into every
+    shard-local pass through :func:`shard_local_engine`.
     """
     ctx = current_tp()
     if ctx is None or engine is None or not engine.routes(site):
@@ -472,7 +477,9 @@ def maybe_tp_matmul(
     size = ctx.size()
     if size <= 1:
         return None
-    spec = EpilogueSpec(bias=bias is not None, activation=activation)
+    spec, bias = as_epilogue(epilogue, bias=bias, activation=activation)
+    if slicing is not None:
+        engine = engine.with_slicing(slicing)
     fold = None if fold is None else jnp.asarray(fold, jnp.int32)
     w = params["w"]
     if isinstance(w, PackedDense):

@@ -1,0 +1,90 @@
+"""Bit-slicing execution mode spec (DESIGN.md §15).
+
+The DPU already bit-slices: every ``operand_bits``-bit operand is
+decomposed into ``ceil(operand_bits / B)`` signed-magnitude slices of
+the analog precision ``B`` and recombined with exact digital shifts
+(paper §III).  :class:`SlicingSpec` makes the *plane width an execution
+choice decoupled from the hardware's B*: slicing int8 operands into
+2-bit planes runs 16 analog passes instead of 4, but each pass's
+product full-scale is ``(2^p - 1)^2`` psum LSBs instead of
+``(2^B - 1)^2`` — the detector sigma, referred to that full-scale,
+shrinks by the same ratio, and the digital shift-add recombination is
+exact.  That trades throughput for fidelity past the per-pass ENOB wall
+(arXiv 2407.06134's escape hatch from the 4-bit saturation measured in
+``benchmarks/org_accuracy.py``).
+
+``resolve_slicing`` is the single normalization point for the
+``slicing=`` argument accepted across the engine GEMM surface
+(``int_gemm`` / ``matmul`` / ``matmul_float`` / ``models.common.dense``):
+``None`` means "hardware slicing only" (today's behavior, bitwise
+unchanged), an int or digit-string is the plane width, and a
+:class:`SlicingSpec` passes through.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+_VALID_PLANE_BITS = (1, 2, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class SlicingSpec:
+    """Bit-sliced execution mode (frozen, hashable; rides jit closures).
+
+    ``plane_bits`` is the per-pass operand plane width p.  Each GEMM runs
+    ``num_planes(operand_bits)**2`` plane-pair passes through the analog
+    channel re-referred to the p-bit full-scale
+    (:func:`repro.noise.sliced_channel`), recombined with exact shifts —
+    under an ideal channel the result is bit-identical to the unsliced
+    exact GEMM.
+    """
+
+    plane_bits: int = 2
+
+    def __post_init__(self):
+        if self.plane_bits not in _VALID_PLANE_BITS:
+            raise ValueError(
+                f"plane_bits must be one of {_VALID_PLANE_BITS}, got "
+                f"{self.plane_bits!r}"
+            )
+
+    def num_planes(self, operand_bits: int) -> int:
+        """Planes per operand: ceil(operand_bits / plane_bits)."""
+        return -(-int(operand_bits) // self.plane_bits)
+
+    def __str__(self) -> str:
+        return f"{self.plane_bits}b-planes"
+
+
+def resolve_slicing(
+    slicing: Union[None, int, str, SlicingSpec],
+) -> Optional[SlicingSpec]:
+    """THE normalization point for the ``slicing=`` mode argument.
+
+    ``None`` / ``"none"`` -> ``None`` (unsliced, today's datapath);
+    an int or digit-string -> ``SlicingSpec(plane_bits)``; a spec passes
+    through.  Anything else raises ``ValueError`` eagerly, mirroring
+    ``repro.orgs.resolve`` / ``repro.platforms.resolve``.
+    """
+    if slicing is None:
+        return None
+    if isinstance(slicing, SlicingSpec):
+        return slicing
+    if isinstance(slicing, bool):  # bool is an int; reject it explicitly
+        raise ValueError(
+            f"slicing must be None, an int, or SlicingSpec, got {slicing!r}"
+        )
+    if isinstance(slicing, int):
+        return SlicingSpec(plane_bits=slicing)
+    if isinstance(slicing, str):
+        text = slicing.strip().lower()
+        if text in ("", "none", "off"):
+            return None
+        if text.isdigit():
+            return SlicingSpec(plane_bits=int(text))
+    raise ValueError(
+        f"slicing must be None, plane bits (int or digit string), or a "
+        f"SlicingSpec, got {slicing!r}"
+    )

@@ -52,7 +52,7 @@ def test_rule_registry_complete():
     ids = [r.id for r in rules]
     assert ids == [
         "RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006", "RPR007",
-        "RPR008",
+        "RPR008", "RPR009",
     ]
     for r in rules:
         assert r.summary and r.rationale, f"{r.id} lacks docs"
@@ -393,6 +393,40 @@ class TestRPR008:
         )
         assert check_source(src, "src/repro/photonic/foo.py") == []
         assert check_source(src, "benchmarks/foo.py") == []
+
+
+# ---------------------------------------------------------------------------
+# RPR009 — single-point platform resolution (mirror of RPR002)
+# ---------------------------------------------------------------------------
+class TestRPR009:
+    def test_upper_on_platform_fires(self):
+        src = "def f(platform):\n    return platform.strip().upper()\n"
+        f = check_source(src, "src/repro/foo.py")
+        assert rule_ids(f) == ["RPR009"]
+        assert f[0].line == 2
+
+    def test_lower_on_material_attr_fires(self):
+        src = "def f(cfg):\n    return cfg.material.lower()\n"
+        assert rule_ids(check_source(src, "src/repro/foo.py")) == ["RPR009"]
+
+    def test_resolve_route_clean(self):
+        # The clean twin of the violating fixture: same normalization
+        # need, routed through THE resolution point.
+        src = (
+            "from repro import platforms\n\n"
+            "def f(platform):\n"
+            "    return platforms.resolve(platform).name\n"
+        )
+        assert check_source(src, "src/repro/foo.py") == []
+
+    def test_non_platform_receiver_clean(self):
+        src = "def f(s):\n    return s.upper()\n"
+        assert check_source(src, "src/repro/foo.py") == []
+
+    def test_platforms_module_exempt(self):
+        src = "def f(platform):\n    return platform.strip().upper()\n"
+        # _normalize_platform itself lives here — the one blessed site.
+        assert check_source(src, "src/repro/platforms.py") == []
 
 
 # ---------------------------------------------------------------------------

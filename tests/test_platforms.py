@@ -1,0 +1,181 @@
+"""Tests for `repro.platforms` — first-class material platform specs.
+
+The PR-9 contract mirrors `repro.orgs`: one frozen spec per platform,
+one blessed resolution point (`repro.platforms.resolve`), eager
+validation at every platform-typed entry point, and an SOI preset that
+is field-for-field the paper's Table IV — so every pre-platform call
+site stays bitwise unchanged.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro import platforms
+from repro.core import scalability as sc
+from repro.core.dpu import DPUConfig
+from repro.core.params import PhotonicParams
+from repro.core.perfmodel import AcceleratorConfig
+from repro.noise import build_channel_model, shard_local_channel
+from repro.platforms import SIN, SOI, PlatformSpec, resolve
+
+
+class TestResolve:
+    def test_round_trips(self):
+        assert resolve("SOI") is SOI
+        assert resolve("SIN") is SIN
+        # Case / whitespace are normalized by the single blessed site.
+        assert resolve("soi") is SOI
+        assert resolve(" sin ") is SIN
+        assert resolve("SiN") is SIN
+        # Spec input is the identity; resolve is idempotent.
+        assert resolve(SOI) is SOI
+        assert resolve(resolve("SIN")) is resolve("SIN")
+
+    def test_registry_snapshot(self):
+        reg = platforms.registered()
+        assert set(reg) >= {"SOI", "SIN"}
+        assert tuple(platforms.PLATFORMS) == ("SOI", "SIN")
+        for name, spec in reg.items():
+            assert spec.name == name
+            assert str(spec) == name
+
+    def test_unknown_platform_raises_naming_choices(self):
+        with pytest.raises(ValueError, match="SOI"):
+            resolve("GAAS")
+        with pytest.raises(ValueError, match="SIN"):
+            resolve("InP")
+
+    def test_non_string_rejected(self):
+        with pytest.raises(ValueError, match="str or PlatformSpec"):
+            resolve(3)
+        with pytest.raises(ValueError, match="str or PlatformSpec"):
+            resolve(None)
+
+    def test_non_canonical_spec_name_rejected(self):
+        with pytest.raises(ValueError, match="canonical"):
+            PlatformSpec(name="soi")
+
+    def test_register_conflict_rejected(self):
+        # Re-registering the identical spec is a no-op...
+        assert platforms.register(SOI) is SOI
+        # ...but forking the physics behind an existing name raises.
+        clash = dataclasses.replace(SOI, propagation_loss_db_per_mm=9.9)
+        with pytest.raises(ValueError, match="already registered"):
+            platforms.register(clash)
+
+
+class TestEagerValidation:
+    @pytest.mark.parametrize(
+        "ctor",
+        [
+            lambda p: DPUConfig(platform=p),
+            lambda p: AcceleratorConfig(platform=p),
+            lambda p: build_channel_model("SMWA", n=8, platform=p),
+            lambda p: sc.calibrated_max_n("SMWA", 4, 5.0, platform=p),
+        ],
+        ids=[
+            "DPUConfig",
+            "AcceleratorConfig",
+            "build_channel_model",
+            "calibrated_max_n",
+        ],
+    )
+    def test_unknown_platform_raises_valueerror(self, ctor):
+        with pytest.raises(ValueError, match="SOI"):
+            ctor("not-a-platform")
+
+    def test_configs_normalize_to_canonical_name(self):
+        assert DPUConfig(platform="sin").platform == "SIN"
+        assert DPUConfig(platform=SIN).platform == "SIN"
+        assert AcceleratorConfig(platform=" soi ").platform == "SOI"
+        assert DPUConfig(platform="sin") == DPUConfig(platform="SIN")
+        assert hash(DPUConfig(platform="sin")) == hash(DPUConfig(platform="SIN"))
+        assert DPUConfig(platform="SIN").platform_spec is SIN
+
+
+class TestSOIIsThePaperBaseline:
+    """SOI.apply is the identity on the Table IV calibration, so every
+    pre-platform call site is bitwise unchanged (PR-9 compat contract)."""
+
+    def test_soi_apply_is_identity_on_calibrated_params(self):
+        assert SOI.apply(sc.CALIBRATED) == sc.CALIBRATED
+        assert SOI.apply(PhotonicParams()) == PhotonicParams()
+
+    def test_soi_preset_matches_table_iv_field_for_field(self):
+        p = PhotonicParams()
+        assert SOI.coupling_loss_db == p.p_ec_il_db == 1.44
+        assert SOI.propagation_loss_db_per_mm == p.p_si_att_db_per_mm == 0.3
+        assert SOI.splitter_loss_db == p.p_splitter_il_db == 0.01
+        assert SOI.mrm_il_db == p.p_mrm_il_db == 4.0
+        assert SOI.mrr_w_il_db == p.p_mrr_w_il_db == 0.01
+        assert SOI.mrm_through_db == p.p_mrm_obl_db == 0.01
+        assert SOI.mrr_w_through_db == p.p_mrr_w_obl_db == 0.01
+        assert SOI.laser_wallplug_eff == p.laser_wallplug_eff == 0.2
+
+    @pytest.mark.parametrize("org", ["ASMW", "MASW", "SMWA"])
+    def test_default_channel_is_the_soi_channel(self, org):
+        """build_channel_model without a platform == explicit SOI, every
+        field equal (frozen-dataclass equality covers the builder tuple)."""
+        default = build_channel_model(org, n=17, bits=4, datarate_gs=5.0)
+        explicit = build_channel_model(
+            org, n=17, bits=4, datarate_gs=5.0, platform="SOI"
+        )
+        assert default == explicit
+        assert default.platform == "SOI"
+        for f in dataclasses.fields(default):
+            assert getattr(default, f.name) == getattr(explicit, f.name), f.name
+
+    def test_sin_apply_changes_only_platform_owned_fields(self):
+        applied = SIN.apply(sc.CALIBRATED)
+        changed = {
+            f.name
+            for f in dataclasses.fields(applied)
+            if getattr(applied, f.name) != getattr(sc.CALIBRATED, f.name)
+        }
+        platform_owned = {
+            "p_ec_il_db",
+            "p_si_att_db_per_mm",
+            "p_splitter_il_db",
+            "p_mrm_il_db",
+            "p_mrr_w_il_db",
+            "p_mrm_obl_db",
+            "p_mrr_w_obl_db",
+            "laser_wallplug_eff",
+        }
+        assert changed <= platform_owned, changed
+        # Idempotent: applying twice is applying once.
+        assert SIN.apply(applied) == applied
+
+
+class TestPlatformProvenance:
+    @pytest.mark.parametrize("org", ["ASMW", "MASW", "SMWA"])
+    def test_shard_local_rebuild_preserves_platform(self, org):
+        base = build_channel_model(org, n=32, bits=4, datarate_gs=5.0, platform="SIN")
+        assert base.platform == "SIN"
+        for n_local in (16, 8, 3):
+            local = shard_local_channel(base, n_local)
+            assert local.platform == "SIN"
+            assert local == build_channel_model(
+                org, n=n_local, bits=4, datarate_gs=5.0, platform="SIN"
+            )
+
+    def test_dpu_config_shard_local_preserves_platform(self):
+        ch = build_channel_model("SMWA", n=32, platform="SIN")
+        cfg = DPUConfig(organization="SMWA", dpe_size=32, platform="SIN", channel=ch)
+        local = cfg.shard_local(8)
+        assert local.platform == "SIN"
+        assert local.channel.platform == "SIN"
+
+    @pytest.mark.parametrize("org", ["ASMW", "MASW", "SMWA"])
+    def test_sin_lower_loss_buys_fanin_and_snr(self, org):
+        """The physics the preset encodes: SiN's lower loss chain yields a
+        larger calibrated N and a better SNR at matched geometry."""
+        n_soi = sc.calibrated_max_n(org, 4, 5.0, platform="SOI")
+        n_sin = sc.calibrated_max_n(org, 4, 5.0, platform="SIN")
+        assert n_sin > n_soi
+        soi = build_channel_model(org, n=32, platform="SOI")
+        sin = build_channel_model(org, n=32, platform="SIN")
+        assert sin.snr_db > soi.snr_db
+        assert sin.detector_sigma_lsb < soi.detector_sigma_lsb
+        assert sin.total_loss_db() < soi.total_loss_db()
