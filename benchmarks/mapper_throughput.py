@@ -1,0 +1,201 @@
+"""Org design space re-run under the mapper: does batching dethrone SMWA?
+
+PR 5's sweep (``org_design_space.py``) found that MWAS — an unstudied
+ordering — beats SMWA on the physics (fewer through devices, a fraction
+of the rings, better SNR at matched N) but loses on FPS/W because the
+batch-1, layer-at-a-time schedule cannot feed the extra cheap DPUs that
+area matching packs in: idle silicon burns laser power.  That is a
+*schedule* conclusion, not a physics one.  This benchmark re-decides it
+with the real scheduler: ``repro.mapper`` maps ResNet50 onto equal-area
+pools (every ordering matched to the paper's SOI SMWA silicon at DR=5)
+with input batching, amortization-priced replication, double-buffered
+psum accumulation and cross-layer DAG dispatch, at batch ∈ {1, 4, 16,
+64} x all 12 S/A/M/W orderings x {SOI, SiN}.
+
+Headline finding (committed in results/BENCH_photonic.json): the winner
+table reports, per (batch, platform), the FPS/W-best ordering and
+whether any unstudied order overtakes SMWA once its DPUs can actually be
+fed — either outcome is a result; the assert is grid completeness.
+
+Also asserted here: the degenerate-schedule contract — the mapper with
+``MapperOptions.degenerate()`` reproduces ``core/simulator.simulate``
+exactly for the paper orgs (the bitwise pin lives in
+``tests/test_mapper.py``; this is the in-benchmark cross-check).
+
+``--smoke`` shrinks to {1, 16} x (3 paper orders + MWAS) x both
+platforms; CI asserts that coverage and uploads the timeline artifact
+(``results/mapper_timeline[_smoke].json``).
+"""
+
+import json
+import time
+
+from repro.core.cnn_workloads import WORKLOADS
+from repro.core.perfmodel import AcceleratorConfig
+from repro.core.simulator import simulate
+from repro.mapper import DpuPool, MapperOptions, WorkloadGraph, map_workload
+from repro.orgs import ORGANIZATIONS, valid_orderings
+
+from benchmarks.run import RESULTS_DIR, register_benchmark
+
+BITS = 4
+MODEL = "resnet50"
+DATARATE_GS = 5.0
+BATCHES = (1, 4, 16, 64)
+PLATFORMS = ("SOI", "SIN")
+SMOKE_BATCHES = (1, 16)
+SMOKE_ORDERS = ("ASMW", "MASW", "SMWA", "MWAS")
+
+
+def _cell(graph: WorkloadGraph, order: str, platform: str, batch: int) -> dict:
+    pool = DpuPool.area_matched(
+        order, DATARATE_GS, bits=BITS, platform=platform
+    )
+    timeline = map_workload(graph, pool, MapperOptions(batch=batch))
+    d = timeline.to_dict()
+    return {
+        "order": order,
+        "platform": platform,
+        "batch": batch,
+        "paper_org": order in ORGANIZATIONS,
+        "n": d["n"],
+        "pool_size": d["pool_size"],
+        "fps": round(d["fps"], 3),
+        "fps_per_w": round(d["fps_per_w"], 5),
+        "avg_power_w": round(d["avg_power_w"], 3),
+        "mean_utilization": round(d["mean_utilization"], 5),
+        "makespan_ms": round(d["makespan_s"] * 1e3, 6),
+    }
+
+
+def _degenerate_crosscheck() -> dict:
+    """Mapper degenerate schedule == legacy simulator, exactly (SOI paper
+    orgs at the Table V operating points; the full 36-cell bitwise pin is
+    in tests/test_mapper.py)."""
+    graph = WorkloadGraph.from_layers(WORKLOADS[MODEL](), name=MODEL)
+    checked = {}
+    for order in ORGANIZATIONS:
+        cfg = AcceleratorConfig.from_paper(order, DATARATE_GS)
+        ref = simulate(MODEL, cfg)
+        timeline = map_workload(
+            graph, DpuPool.from_config(cfg), MapperOptions.degenerate()
+        )
+        assert timeline.fps == ref.fps, (order, timeline.fps, ref.fps)
+        assert timeline.fps_per_w == ref.fps_per_w, order
+        assert timeline.dynamic_energy_j == ref.dynamic_energy_j, order
+        checked[order] = round(ref.fps, 3)
+    return checked
+
+
+@register_benchmark("mapper_throughput")
+def main(smoke: bool = False) -> dict:
+    batches = SMOKE_BATCHES if smoke else BATCHES
+    orders = (
+        SMOKE_ORDERS if smoke else tuple(s.name for s in valid_orderings())
+    )
+    t0 = time.time()
+    graph = WorkloadGraph.from_layers(WORKLOADS[MODEL](), name=MODEL)
+
+    cells = {}
+    print("mapper_throughput,org_design_space_under_the_mapper")
+    print("order,platform,batch,n,pool,fps,fps_per_w,util,makespan_ms")
+    for platform in PLATFORMS:
+        for order in orders:
+            for batch in batches:
+                c = _cell(graph, order, platform, batch)
+                cells[f"{order}_{platform}_b{batch}"] = c
+                print(
+                    f"{order},{platform},{batch},{c['n']},{c['pool_size']},"
+                    f"{c['fps']},{c['fps_per_w']},{c['mean_utilization']},"
+                    f"{c['makespan_ms']}"
+                )
+
+    # -- winner table: per (batch, platform), the FPS/W-best ordering -------
+    winners = {}
+    smwa_dethroned = {}
+    for platform in PLATFORMS:
+        for batch in batches:
+            group = [
+                c
+                for c in cells.values()
+                if c["platform"] == platform and c["batch"] == batch
+            ]
+            best = max(group, key=lambda c: c["fps_per_w"])
+            smwa = next(c for c in group if c["order"] == "SMWA")
+            key = f"{platform}_b{batch}"
+            winners[key] = {
+                "order": best["order"],
+                "fps_per_w": best["fps_per_w"],
+                "paper_org": best["paper_org"],
+                "vs_smwa": round(best["fps_per_w"] / smwa["fps_per_w"], 4),
+            }
+            smwa_dethroned[key] = best["order"] != "SMWA"
+            print(
+                f"# winner {key}: {best['order']} "
+                f"({best['fps_per_w']} FPS/W, "
+                f"{winners[key]['vs_smwa']}x SMWA)"
+            )
+
+    mwas_vs_smwa = {
+        f"{platform}_b{batch}": round(
+            cells[f"MWAS_{platform}_b{batch}"]["fps_per_w"]
+            / cells[f"SMWA_{platform}_b{batch}"]["fps_per_w"],
+            4,
+        )
+        for platform in PLATFORMS
+        for batch in batches
+        if f"MWAS_{platform}_b{batch}" in cells
+    }
+    degenerate_fps = _degenerate_crosscheck()
+    print(f"# smwa_dethroned: {smwa_dethroned}")
+    print(f"# mwas_vs_smwa_fps_per_w: {mwas_vs_smwa}")
+    print(f"# degenerate_crosscheck_fps: {degenerate_fps}")
+    print(f"# total_s={time.time() - t0:.1f}")
+
+    # -- timeline artifact (per-DPU schedules; CI uploads it) ---------------
+    artifact = {
+        f"{order}_{platform}": map_workload(
+            graph,
+            DpuPool.area_matched(
+                order, DATARATE_GS, bits=BITS, platform=platform
+            ),
+            MapperOptions(batch=max(batches)),
+        ).to_dict()
+        for platform in PLATFORMS
+        for order in ("SMWA", "MWAS")
+    }
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    artifact_path = (
+        RESULTS_DIR / f"mapper_timeline{'_smoke' if smoke else ''}.json"
+    )
+    artifact_path.write_text(json.dumps(artifact, indent=1))
+    print(f"# wrote {artifact_path}")
+
+    # Acceptance: the grid is complete — every requested (order, platform,
+    # batch) cell is present; batch 1 AND a batch > 1 ran on both
+    # platforms; at least one novel ordering is in the grid.
+    assert len(cells) == len(orders) * len(PLATFORMS) * len(batches), cells
+    assert any(not c["paper_org"] for c in cells.values()), orders
+    assert {1} < set(batches), batches
+
+    return {
+        "bits": BITS,
+        "model": MODEL,
+        "datarate_gs": DATARATE_GS,
+        "batches": list(batches),
+        "platforms": list(PLATFORMS),
+        "orders": sorted(set(orders)),
+        "winners": winners,
+        "smwa_dethroned": smwa_dethroned,
+        "mwas_vs_smwa_fps_per_w": mwas_vs_smwa,
+        "degenerate_crosscheck_fps": degenerate_fps,
+        "cells": cells,
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    main(smoke=ap.parse_args().smoke)

@@ -83,6 +83,13 @@ def main(argv=None) -> None:
     parser.add_argument(
         "--smoke", action="store_true", help="shrink sweeps to a CI-sized subset"
     )
+    parser.add_argument(
+        "--select",
+        metavar="NAME",
+        help="run a single registered benchmark (its report lands in "
+        "results/BENCH_photonic.NAME[_smoke].json so a partial run never "
+        "clobbers the committed full-sweep trajectory)",
+    )
     args = parser.parse_args(argv)
 
     # One tuned launch profile for every bench (allocator detection, log
@@ -97,6 +104,7 @@ def main(argv=None) -> None:
         fig5_scalability,
         fig7_system,
         fused_hotpath,
+        mapper_throughput,
         noise_accuracy,
         org_accuracy,
         org_design_space,
@@ -112,9 +120,18 @@ def main(argv=None) -> None:
     except Exception:
         pass
 
+    selected = registered_benchmarks()
+    if args.select is not None:
+        if args.select not in selected:
+            parser.error(
+                f"unknown benchmark {args.select!r}; registered: "
+                f"{', '.join(selected)}"
+            )
+        selected = {args.select: selected[args.select]}
+
     failures = []
     report = {"smoke": args.smoke, "launch_profile": launch_profile, "benches": {}}
-    for name, fn in registered_benchmarks().items():
+    for name, fn in selected.items():
         print(f"\n===== {name} =====")
         t0 = time.time()
         derived = None
@@ -140,8 +157,14 @@ def main(argv=None) -> None:
 
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     # Smoke runs land in a separate (gitignored) file so the committed
-    # trajectory only ever contains full-sweep numbers.
-    name = "BENCH_photonic_smoke.json" if args.smoke else "BENCH_photonic.json"
+    # trajectory only ever contains full-sweep numbers; --select runs are
+    # likewise namespaced (and gitignored) so a single-bench rerun never
+    # rewrites the committed report.
+    suffix = "_smoke" if args.smoke else ""
+    if args.select is not None:
+        name = f"BENCH_photonic.{args.select}{suffix}.json"
+    else:
+        name = f"BENCH_photonic{suffix}.json"
     out_path = RESULTS_DIR / name
     out_path.write_text(json.dumps(report, indent=1, default=str))
     print(f"\nwrote {out_path}")

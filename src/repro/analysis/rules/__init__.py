@@ -9,6 +9,7 @@ from repro.analysis.rules import (  # noqa: F401
     compat,
     engine,
     epilogue,
+    mapper,
     orgs,
     platforms,
     quant,

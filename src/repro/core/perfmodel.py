@@ -10,7 +10,7 @@ model is reported alongside as a cross-check (benchmarks/table5_dpu.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Sequence
 
 from repro import platforms as _platforms
 from repro.core import scalability
@@ -153,6 +153,21 @@ class AcceleratorConfig:
         adc = p.adc(self.datarate_gs).power_w
         return self.dacs_per_dpu * p.dac.power_w + self.adcs_per_dpu * adc
 
+    def weight_reprogram_cost(self, groups: int = 1):
+        """Latency/energy to (re)program one weight tile's rings — the
+        weight-stationary cost the prepacking layer models
+        (:func:`repro.photonic.packing.reprogram_cost`).  Dense tiles
+        program all ``N x M`` weight rings; depthwise tiles hold one
+        k-dot per DPE, so only the ``M`` active rings are driven."""
+        from repro.photonic.packing import reprogram_cost
+
+        rings = self.n * self.m if groups == 1 else self.m
+        return reprogram_cost(
+            rings,
+            tune_latency_s=self.tune_latency_s,
+            tune_power_w_per_ring=self.tune_power_w_per_ring,
+        )
+
     # ---- convenience -------------------------------------------------------
     @staticmethod
     def from_paper(
@@ -224,14 +239,34 @@ def area_matched_count(cfg: AcceleratorConfig, target_area_mm2: float) -> int:
 
 
 def area_matched_counts(
-    datarate_gs: float, base: AcceleratorConfig | None = None
+    datarate_gs: float,
+    base: AcceleratorConfig | None = None,
+    *,
+    organizations: "Sequence[str | OrgSpec] | None" = None,
+    bits: int = 4,
+    platform: "str | _platforms.PlatformSpec" = "SOI",
 ) -> Dict[str, int]:
     """Our area model's DPU counts matching SMWA's area (cross-check of the
-    paper's area-proportionate analysis, Table V bottom rows)."""
+    paper's area-proportionate analysis, Table V bottom rows).
+
+    Default (``organizations=None``): the paper's three studied orders at
+    their Table V operating points — unchanged legacy behavior.  With an
+    explicit ``organizations`` list, each order is sized by the calibrated
+    solver (``from_scalability``, any valid ordering, either platform) and
+    area-matched to ``base``'s silicon — the mapper's equal-area pool
+    construction (``DpuPool.area_matched``)."""
     base = base or AcceleratorConfig.from_paper("SMWA", datarate_gs)
     target = base.total_area_mm2()
-    out = {"SMWA": base.dpu_count}
-    for org in ("ASMW", "MASW"):
-        cfg = AcceleratorConfig.from_paper(org, datarate_gs)
-        out[org] = area_matched_count(cfg, target)
+    if organizations is None:
+        out = {"SMWA": base.dpu_count}
+        for org in ("ASMW", "MASW"):
+            cfg = AcceleratorConfig.from_paper(org, datarate_gs)
+            out[org] = area_matched_count(cfg, target)
+        return out
+    out: Dict[str, int] = {}
+    for org in organizations:
+        cfg = AcceleratorConfig.from_scalability(
+            org, datarate_gs, bits=bits, platform=platform
+        )
+        out[cfg.organization] = area_matched_count(cfg, target)
     return out

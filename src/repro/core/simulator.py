@@ -22,16 +22,30 @@ Depthwise convs map one k=9 dot per DPE (an analog DPE cannot share its
 summation across independent dots), so large-N DPUs waste N-9 rings there —
 the model charges full-DPE occupancy, matching the paper's observation that
 psum/utilization effects, not raw N, drive the final FPS ordering.
+
+Since PR 10 the event loop itself lives in :mod:`repro.mapper`:
+``simulate`` *is* the mapper's degenerate schedule
+(``MapperOptions.degenerate()`` — batch=1, no replication, no overlap,
+layer-at-a-time barriers on one pool) and reproduces the pre-mapper
+numbers bit-for-bit (DESIGN.md §16 contract; pinned by
+``tests/test_mapper.py``).  Chunked dots pace at the psum-reduction
+clock: every symbol's psum must round-trip the 320 MHz accumulation
+FIFO (Table VI reduction network) before the next chunk's contribution
+can merge, so the effective symbol time is max(1/DR, 3.125 ns) when
+chunks > 1 — at high datarates the fixed reduction clock throttles
+small-N organizations on every chunked layer, and N shrinks with
+datarate (Table V), which is why absolute FPS *decreases* with DR for
+all organizations (Fig. 7a).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Dict, List
 
-from repro.core.cnn_workloads import WORKLOADS, GemmLayer
+from repro.core.cnn_workloads import WORKLOADS
 from repro.core.perfmodel import AcceleratorConfig
+from repro.mapper import DpuPool, MapperOptions, WorkloadGraph, map_workload
 from repro.orgs import ORGANIZATIONS, resolve
 
 
@@ -72,105 +86,38 @@ class SimResult:
         return self.fps_per_w / self.config.total_area_mm2()
 
 
-def _simulate_layer(layer: GemmLayer, cfg: AcceleratorConfig) -> LayerStats:
-    p = cfg.peripherals
-    sym = cfg.symbol_s
-    tune = cfg.tune_latency_s  # org-dependent: hitless SMWA = EO, else TO
-
-    if layer.groups == 1:
-        chunks = -(-layer.k // cfg.n)
-        col_tiles = -(-layer.cols // cfg.m)
-        rows = layer.rows
-        psums_per_output = chunks * cfg.passes
-        outputs = layer.rows * layer.cols
-    else:
-        # depthwise: each output channel is an independent k-dot; a DPE holds
-        # one dot -> M channels per DPU tile-slot (N-9 rings idle).
-        chunks = 1
-        col_tiles = -(-layer.groups // cfg.m)
-        rows = layer.rows
-        psums_per_output = cfg.passes
-        outputs = layer.rows * layer.groups
-    n_tiles = chunks * col_tiles * cfg.passes
-
-    # --- event loop: output-stationary dispatch (paper §V-B) ---------------
-    # Each output-column tile is OWNED by one DPU: its psums accumulate
-    # locally across the chunks x passes weight tiles, which therefore run
-    # *sequentially* on that DPU (an analog DPE cannot merge psums from a
-    # sibling DPU without a cross-DPU reduction round-trip).  The serial
-    # chain per output tile is ceil(k/N) * passes weight tiles long.
-    #
-    # Chunked dots additionally pace at the psum-reduction clock: every
-    # symbol's psum must round-trip the 320 MHz accumulation FIFO (Table VI
-    # reduction network) before the next chunk's contribution can merge, so
-    # the effective symbol time is max(1/DR, 3.125 ns) when chunks > 1.
-    # Dots that fit one DPE (k <= N) skip the FIFO and stream at full DR —
-    # this is what the paper means by "larger N generates less psums which
-    # reduces the use of the psum reduction network": at high datarates the
-    # fixed reduction clock throttles small-N organizations on every
-    # chunked layer, and N shrinks with datarate (Table V), which is why
-    # absolute FPS *decreases* with DR for all organizations (Fig. 7a).
-    sym_eff = max(sym, p.reduction_network.latency_s) if chunks > 1 else sym
-    serial_dur = chunks * cfg.passes * (tune + rows * sym_eff)
-    heap = [(0.0, d) for d in range(cfg.dpu_count)]
-    heapq.heapify(heap)
-    end = 0.0
-    busy_s = 0.0
-    for _ in range(col_tiles):
-        free, d = heapq.heappop(heap)
-        fin = free + serial_dur
-        busy_s += serial_dur
-        end = max(end, fin)
-        heapq.heappush(heap, (fin, d))
-    stream_s = end
-
-    # --- psum accounting ----------------------------------------------------
-    total_psums = outputs * psums_per_output
-    reductions = outputs * (psums_per_output - 1) if psums_per_output > 1 else 0
-    red_s = (
-        (sym_eff - sym) * rows * chunks * cfg.passes if chunks > 1 else 0.0
-    )  # throttle attributable to the reduction clock (reported per layer)
-    time_s = stream_s + p.reduction_network.latency_s
-
-    # --- energy -------------------------------------------------------------
-    stream_energy = busy_s * cfg.streaming_power_w()
-    tune_energy = n_tiles * (
-        cfg.tune_power_w_per_ring * tune * (
-            cfg.n * cfg.m if layer.groups == 1 else cfg.m
-        )
-    )
-    red_energy = (
-        reductions * p.reduction_network.power_w * p.reduction_network.latency_s
-    )
-    # psum + activation movement: eDRAM write/read + bus per psum word
-    mem_energy = total_psums * (
-        p.edram.power_w * p.edram.latency_s + p.bus.power_w * p.bus.latency_s / cfg.m
-    )
-    act_energy = outputs * p.activation_unit.power_w * p.activation_unit.latency_s
-    energy = stream_energy + tune_energy + red_energy + mem_energy + act_energy
-
-    return LayerStats(
-        name=layer.name,
-        time_s=time_s,
-        stream_s=stream_s,
-        reduce_s=red_s,
-        tune_s=n_tiles * tune / cfg.dpu_count,
-        energy_j=energy,
-        psums=total_psums,
-        tiles_dispatched=n_tiles,
-    )
-
-
 def simulate(model: str, cfg: AcceleratorConfig) -> SimResult:
-    layers = [_simulate_layer(l, cfg) for l in WORKLOADS[model]()]
-    total = sum(l.time_s for l in layers)
-    energy = sum(l.energy_j for l in layers)
+    """Batch-1 CNN inference = the mapper's degenerate schedule.
+
+    The layer chain lowers to a :class:`~repro.mapper.WorkloadGraph`, the
+    pool is ``cfg``'s own ``dpu_count`` DPUs, and the schedule is
+    ``MapperOptions.degenerate()`` — which is contractually bit-for-bit
+    the pre-PR-10 event loop (output-stationary greedy dispatch, FIFO-
+    paced chunked dots, per-layer barriers).
+    """
+    graph = WorkloadGraph.from_layers(WORKLOADS[model](), name=model)
+    timeline = map_workload(
+        graph, DpuPool.from_config(cfg), MapperOptions.degenerate()
+    )
+    layers = [
+        LayerStats(
+            name=ns.name,
+            time_s=ns.time_s,
+            stream_s=ns.stream_s,
+            reduce_s=ns.reduce_s,
+            tune_s=ns.tune_s,
+            energy_j=ns.energy_j,
+            psums=ns.psums,
+            tiles_dispatched=ns.tiles,
+        )
+        for ns in timeline.nodes
+    ]
     return SimResult(
         model=model,
         config=cfg,
-        total_time_s=total,
-        dynamic_energy_j=energy,
-        static_power_w=cfg.static_power_w(),
+        total_time_s=timeline.makespan_s,
+        dynamic_energy_j=timeline.dynamic_energy_j,
+        static_power_w=timeline.static_power_w,
         layers=layers,
     )
 

@@ -23,6 +23,7 @@ straight through it.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional, Tuple
 
 import jax
@@ -30,6 +31,36 @@ import jax.numpy as jnp
 
 from repro.core.dpu import quantize_symmetric
 from repro.photonic.engine import PhotonicEngine, pallas_tiling
+
+
+@dataclasses.dataclass(frozen=True)
+class ReprogramCost:
+    """Latency/energy to (re)program one weight tile onto a DPU's rings.
+
+    This is the weight-stationary cost the prepacking below exists to
+    amortize: the tile is EO-tuned once (``latency_s``, Table VI) and
+    then streamed against for free.  The mapper prices replication with
+    it (``AcceleratorConfig.weight_reprogram_cost``) — a row-split
+    replica re-programs the full tile chain, so it must stream long
+    enough to cover its own reprogramming.
+    """
+
+    latency_s: float
+    energy_j: float
+    rings: int
+
+
+def reprogram_cost(
+    rings: int, *, tune_latency_s: float, tune_power_w_per_ring: float
+) -> ReprogramCost:
+    """Cost of programming ``rings`` weight rings in one tuning pass.
+    (Energy is spelled ``(power x latency) x rings`` to stay bit-identical
+    with the legacy simulator's tune-energy accounting.)"""
+    return ReprogramCost(
+        latency_s=tune_latency_s,
+        energy_j=tune_power_w_per_ring * tune_latency_s * rings,
+        rings=rings,
+    )
 
 
 @jax.tree_util.register_pytree_node_class

@@ -52,7 +52,7 @@ def test_rule_registry_complete():
     ids = [r.id for r in rules]
     assert ids == [
         "RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006", "RPR007",
-        "RPR008", "RPR009",
+        "RPR008", "RPR009", "RPR010",
     ]
     for r in rules:
         assert r.summary and r.rationale, f"{r.id} lacks docs"
@@ -427,6 +427,63 @@ class TestRPR009:
         src = "def f(platform):\n    return platform.strip().upper()\n"
         # _normalize_platform itself lives here — the one blessed site.
         assert check_source(src, "src/repro/platforms.py") == []
+
+
+# ---------------------------------------------------------------------------
+# RPR010 — timing/FPS aggregation routes through the mapper timeline
+# ---------------------------------------------------------------------------
+class TestRPR010:
+    def test_sum_over_time_s_fires(self):
+        src = (
+            "def makespan(layers):\n"
+            "    return sum(l.time_s for l in layers)\n"
+        )
+        f = check_source(src, "src/repro/foo.py")
+        assert rule_ids(f) == ["RPR010"]
+        assert f[0].line == 2
+
+    def test_binop_on_makespan_fires(self):
+        src = "def fps(t):\n    return 1.0 / t.makespan_s\n"
+        assert rule_ids(check_source(src, "src/repro/foo.py")) == ["RPR010"]
+
+    def test_augassign_energy_fires(self):
+        src = (
+            "def total(nodes):\n"
+            "    e = 0.0\n"
+            "    for n in nodes:\n"
+            "        e += n.energy_j\n"
+            "    return e\n"
+        )
+        assert rule_ids(check_source(src, "src/repro/foo.py")) == ["RPR010"]
+
+    def test_benchmark_scope_fires(self):
+        src = "def ms(t):\n    return t.makespan_s * 1e3\n"
+        assert rule_ids(check_source(src, "benchmarks/foo.py")) == ["RPR010"]
+
+    def test_timeline_metrics_clean(self):
+        # The clean twin: same numbers, read from the blessed surface.
+        src = (
+            "def report(timeline):\n"
+            "    d = timeline.to_dict()\n"
+            "    return timeline.fps_per_w, d['makespan_s'] * 1e3\n"
+        )
+        assert check_source(src, "src/repro/foo.py") == []
+
+    def test_plain_read_and_store_clean(self):
+        src = (
+            "def record(ns):\n"
+            "    return {'time_s': ns.time_s, 'energy_j': ns.energy_j}\n"
+        )
+        assert check_source(src, "src/repro/foo.py") == []
+
+    def test_mapper_and_simulator_exempt(self):
+        src = "def makespan(ls):\n    return sum(l.time_s for l in ls)\n"
+        assert check_source(src, "src/repro/mapper/timeline.py") == []
+        assert check_source(src, "src/repro/core/simulator.py") == []
+
+    def test_tests_out_of_scope(self):
+        src = "def f(a, b):\n    return a.time_s - b.time_s\n"
+        assert check_source(src, "tests/test_foo.py") == []
 
 
 # ---------------------------------------------------------------------------
